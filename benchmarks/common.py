@@ -1,0 +1,62 @@
+"""Shared benchmark utilities: timing, scene prep, CSV emission.
+
+CPU caveat (stated once here, applies to every figure): wall-clock numbers
+on this host measure *relative algorithmic cost* (searches, passes over
+data, op counts), not TPU latencies. Each benchmark therefore also reports
+hardware-independent work counters where the paper's claim is about work
+(e.g. binary-search count for Fig. 10). Roofline-derived TPU projections
+live in EXPERIMENTS.md §Roofline, not here.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_coord_set
+from repro.data import scenes
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time (seconds) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def us(x: float) -> float:
+    return round(x * 1e6, 1)
+
+
+def scene_set(kind: str = "mixed"):
+    """The benchmark scene pool: 2 indoor + 2 outdoor (as the paper uses
+    indoor+outdoor datasets). Sizes are scaled to this CPU host (~20–60k
+    voxels/scene) — the paper's 90k–1M-voxel GPU scenes would take hours
+    per figure here; relative engine comparisons are size-stable (fig10
+    sweeps sizes explicitly via the scene pool ordering)."""
+    out = [
+        ("indoor_0", scenes.indoor_scene(0, room=(96, 80, 36))),
+        ("indoor_1", scenes.indoor_scene(1, room=(140, 110, 44))),
+        ("outdoor_0", scenes.outdoor_scene(0, extent=(320, 320, 36), n_objects=12)),
+        ("outdoor_1", scenes.outdoor_scene(1, extent=(448, 448, 40), n_objects=16)),
+    ]
+    return out
+
+
+def prep(scene, capacity=None):
+    packed = scenes.pack_scene(scene, capacity)
+    return build_coord_set(jnp.asarray(packed)), packed
+
+
+def emit(rows):
+    """Print name,us_per_call,derived CSV rows (harness contract)."""
+    for name, t_us, derived in rows:
+        print(f"{name},{t_us},{derived}")

@@ -1,0 +1,56 @@
+"""Paper Fig. 10: mapping performance (pre-processing + search) across
+engines, scene sizes and kernel sizes.
+
+Engines: Spira z-delta (no pre-processing) vs Simple BSearch (packed, no
+pre-processing) vs hash table (build = pre-processing + probe lookups,
+TorchSparse-style). Reports wall time and the hardware-independent search
+counts (z-delta's |Vq|·K² anchors vs |Vq|·K³ full searches).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (offset_grid, pack_offsets, simple_bsearch,
+                        zdelta_offsets, zdelta_search)
+from repro.core import hashmap
+from .common import emit, prep, scene_set, timeit, us
+
+
+def run(K: int = 3):
+    rows = []
+    for name, sc in scene_set():
+        cs, _ = prep(sc)
+        n = int(cs.count)
+        _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+        offs = pack_offsets(jnp.asarray(offset_grid(K, 1)), sc.layout)
+
+        zd = jax.jit(lambda c: zdelta_search(c, c, anchors, zstep, K=K))
+        bs = jax.jit(lambda c: simple_bsearch(c, c, offs, K=K))
+        ts = hashmap.table_size_for(cs.capacity)
+
+        def hash_full(c):
+            tk, tv = hashmap.build_table(c, table_size=ts)
+            return hashmap.hash_kernel_map(tk, tv, c, offs, K=K)
+
+        def hash_build(c):
+            return hashmap.build_table(c, table_size=ts)
+
+        hf = jax.jit(hash_full)
+        hb = jax.jit(hash_build)
+
+        t_z = timeit(zd, cs)
+        t_b = timeit(bs, cs)
+        t_h = timeit(hf, cs)
+        t_hb = timeit(hb, cs)
+        rows.append((f"fig10/{name}/K{K}/zdelta", us(t_z),
+                     f"n={n};searches={n * K * K};speedup_vs_bsearch={t_b / t_z:.2f}"))
+        rows.append((f"fig10/{name}/K{K}/bsearch", us(t_b),
+                     f"n={n};searches={n * K ** 3}"))
+        rows.append((f"fig10/{name}/K{K}/hash", us(t_h),
+                     f"n={n};preproc_frac={t_hb / t_h:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(3)
+    run(5)

@@ -1,0 +1,106 @@
+"""Paper Fig. 11: incremental ablation of Spira's ideas on a (32,32,5)
+layer: (0) unpacked bsearch+OS → (1) packed-native bsearch+OS → (2) z-delta
+search+OS → (3) adaptive hybrid dataflow.
+
+The "unpacked" baseline searches 3-component coordinate rows
+lexicographically (the cost packed-native indexing removes)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from repro.core import (KernelMap, hybrid, offset_grid, output_stationary,
+                        pack_offsets, simple_bsearch,
+                        tune_threshold_cost_model, unpack, zdelta_offsets,
+                        zdelta_search)
+from repro.core.voxel import pad_value
+from .common import emit, prep, scene_set, timeit, us
+
+
+@partial(jax.jit, static_argnames=("K",))
+def unpacked_bsearch(coords_sorted, valid_n, queries_offsets, *, K):
+    """Row-wise lexicographic binary search on int32[N,3] coordinates —
+    what prior engines pay when coordinates stay unpacked (3 compares per
+    probe step instead of 1)."""
+    n = coords_sorted.shape[0]
+
+    def less(a, b):  # lexicographic a < b over rows
+        return jnp.where(
+            a[..., 0] != b[..., 0], a[..., 0] < b[..., 0],
+            jnp.where(a[..., 1] != b[..., 1], a[..., 1] < b[..., 1],
+                      a[..., 2] < b[..., 2]))
+
+    def bsearch(q):  # q: [3]
+        def body(c, _):
+            lo, hi = c
+            mid = (lo + hi) // 2
+            go_right = less(coords_sorted[mid], q)
+            return (jnp.where(go_right, mid + 1, lo),
+                    jnp.where(go_right, hi, mid)), None
+
+        (lo, _), _ = jax.lax.scan(body, (0, n), None,
+                                  length=int(np.ceil(np.log2(n))) + 1)
+        hit = (coords_sorted[jnp.clip(lo, 0, n - 1)] == q).all()
+        return jnp.where(hit & (lo < n), lo, -1)
+
+    return jax.vmap(jax.vmap(bsearch))(queries_offsets)
+
+
+def run():
+    rows = []
+    cin = cout = 32
+    K = 5
+    name, sc = scene_set()[0]
+    cs, _ = prep(sc)
+    n = int(cs.count)
+    _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+    offs_packed = pack_offsets(jnp.asarray(offset_grid(K, 1)), sc.layout)
+    m = zdelta_search(cs, cs, anchors, zstep, K=K)
+    kmap = KernelMap(m=m, out_count=cs.count, in_count=cs.count)
+    cap = int(np.asarray(kmap.column_counts()).max()) + 8
+    feats = jax.random.normal(jax.random.key(0), (cs.capacity, cin))
+    w = jax.random.normal(jax.random.key(1), (K ** 3, cin, cout)) * 0.05
+    t_best = tune_threshold_cost_model(kmap, K=K, stride=1, cin=cin,
+                                       cout=cout).t_best
+
+    # step 0: unpacked bsearch + OS
+    coords3, _ = unpack(cs.packed, sc.layout)
+    coords3 = jnp.where((cs.packed == pad_value(cs.packed.dtype))[:, None],
+                        np.iinfo(np.int32).max, coords3)
+    offs3 = jnp.asarray(offset_grid(K, 1))
+    queries = coords3[:, None, :] + offs3[None, :, :]
+
+    def v0(c3, q):
+        mm = unpacked_bsearch(c3, n, q, K=K)
+        return output_stationary(feats, mm, w)
+
+    # step 1: packed bsearch + OS
+    def v1(c):
+        mm = simple_bsearch(c, c, offs_packed, K=K)
+        return output_stationary(feats, mm, w)
+
+    # step 2: zdelta + OS
+    def v2(c):
+        mm = zdelta_search(c, c, anchors, zstep, K=K)
+        return output_stationary(feats, mm, w)
+
+    # step 3: zdelta + hybrid
+    def v3(c):
+        mm = zdelta_search(c, c, anchors, zstep, K=K)
+        km = KernelMap(m=mm, out_count=c.count, in_count=c.count)
+        return hybrid(feats, km, w, K=K, stride=1, t=t_best, ws_capacity=cap)
+
+    t0 = timeit(jax.jit(v0), coords3, queries, repeats=1, warmup=1)
+    t1 = timeit(jax.jit(v1), cs, repeats=3)
+    t2 = timeit(jax.jit(v2), cs, repeats=3)
+    t3 = timeit(jax.jit(v3), cs, repeats=3)
+    base = t0
+    for label, t in [("0_unpacked_bsearch_os", t0), ("1_packed_bsearch_os", t1),
+                     ("2_zdelta_os", t2), ("3_zdelta_hybrid", t3)]:
+        rows.append((f"fig11/{label}", us(t), f"speedup_vs_base={base / t:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

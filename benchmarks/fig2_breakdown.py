@@ -1,0 +1,72 @@
+"""Paper Fig. 2: layer time breakdown (pre-processing / search /
+post-processing+feature) for two submanifold layers, across engine
+configurations. Phases are timed as separately-jitted stages; "Spira" has a
+zero pre-processing bar by construction (one-shot design)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KernelMap, hybrid, offset_grid, output_stationary,
+                        pack_offsets, simple_bsearch,
+                        tune_threshold_cost_model, weight_stationary,
+                        zdelta_offsets, zdelta_search)
+from repro.core import hashmap
+from .common import emit, prep, scene_set, timeit, us
+
+LAYERS = [(64, 64, 3), (32, 32, 5)]   # the paper's two exemplar layers
+
+
+def run():
+    rows = []
+    name, sc = scene_set()[0]
+    cs, _ = prep(sc)
+    for cin, cout, K in LAYERS:
+        _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+        offs = pack_offsets(jnp.asarray(offset_grid(K, 1)), sc.layout)
+        m0 = zdelta_search(cs, cs, anchors, zstep, K=K)
+        kmap = KernelMap(m=m0, out_count=cs.count, in_count=cs.count)
+        cap = int(np.asarray(kmap.column_counts()).max()) + 8
+        feats = jax.random.normal(jax.random.key(0), (cs.capacity, cin))
+        w = jax.random.normal(jax.random.key(1), (K ** 3, cin, cout)) * 0.05
+        tb = tune_threshold_cost_model(kmap, K=K, stride=1, cin=cin,
+                                       cout=cout).t_best
+        lbl = f"l{cin}_{cout}_{K}"
+        ts = hashmap.table_size_for(cs.capacity)
+
+        # hash engine (TorchSparse-style): preproc = table build
+        t_pre = timeit(jax.jit(lambda c: hashmap.build_table(c, table_size=ts)), cs)
+        tk, tv = hashmap.build_table(cs, table_size=ts)
+        t_search_h = timeit(jax.jit(
+            lambda c: hashmap.hash_kernel_map(tk, tv, c, offs, K=K)), cs)
+        rows.append((f"fig2/{lbl}/hash/preprocess", us(t_pre), ""))
+        rows.append((f"fig2/{lbl}/hash/search", us(t_search_h), ""))
+
+        # Minuet-style bsearch: no preproc, full searches
+        t_search_b = timeit(jax.jit(
+            lambda c: simple_bsearch(c, c, offs, K=K)), cs)
+        rows.append((f"fig2/{lbl}/bsearch/search", us(t_search_b), ""))
+
+        # Spira: zero preproc, z-delta search
+        t_search_z = timeit(jax.jit(
+            lambda c: zdelta_search(c, c, anchors, zstep, K=K)), cs)
+        rows.append((f"fig2/{lbl}/spira/preprocess", 0.0, "one-shot"))
+        rows.append((f"fig2/{lbl}/spira/search", us(t_search_z),
+                     f"speedup_vs_hash={t_search_h / t_search_z:.2f};"
+                     f"vs_bsearch={t_search_b / t_search_z:.2f}"))
+
+        # feature computation per dataflow
+        for dname, fn in [
+            ("os", jax.jit(lambda f, km: output_stationary(f, km.m, w))),
+            ("ws", jax.jit(lambda f, km: weight_stationary(f, km.m, w,
+                                                           capacity=cap))),
+            ("hybrid", jax.jit(lambda f, km: hybrid(f, km, w, K=K, stride=1,
+                                                    t=tb, ws_capacity=cap))),
+        ]:
+            rows.append((f"fig2/{lbl}/feature/{dname}",
+                         us(timeit(fn, feats, kmap, repeats=3)), f"t={tb}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 7: end-to-end inference across networks (ResN / UNet / ResNL)
+and scenes, Spira vs baseline engines. End-to-end = network-wide voxel
+indexing + full feature pass (packing+sorting of the initial coordinates is
+charged to Spira, as in the paper's methodology §6.1)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_network_plan
+from repro.data import scenes as sc_mod
+from repro.models import pointcloud as pc
+from .common import emit, timeit, us
+
+
+def run():
+    rows = []
+    nets = [pc.sparse_resnet21(), pc.minkunet42(), pc.centerpoint_large(in_channels=4)]
+    pool = [("indoor", sc_mod.indoor_scene(0, room=(96, 80, 36))),
+            ("outdoor", sc_mod.outdoor_scene(0, extent=(320, 320, 36), n_objects=12))]
+    for net in nets:
+        params = pc.init_pointcloud(jax.random.key(0), net)
+        for sname, sc in pool:
+            packed = sc_mod.pack_scene(sc)
+            n = len(sc.coords)
+            feats = jnp.zeros((packed.shape[0], net.in_channels)).at[:n].set(
+                jax.random.normal(jax.random.key(1), (n, net.in_channels)))
+
+            def end2end(raw, f, engine):
+                plan = build_network_plan(raw, specs=net.conv_specs(),
+                                          layout=sc.layout, engine=engine)
+                return pc.pointcloud_forward(params, net, plan, f)
+
+            for engine in ("zdelta", "bsearch", "hash"):
+                fn = jax.jit(lambda r, f, e=engine: end2end(r, f, e))
+                dt = timeit(fn, jnp.asarray(packed), feats, repeats=3)
+                rows.append((f"fig7/{net.name}/{sname}/{engine}", us(dt),
+                             f"n_voxels={n}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

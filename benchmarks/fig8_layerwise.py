@@ -1,0 +1,64 @@
+"""Paper Fig. 8: layerwise performance across engines, (Cin, Cout, K)
+sweep. Engines: Spira (zdelta + best dataflow) vs hash-engine
+(TorchSparse-style: hash map + output-stationary) vs bsearch-engine
+(Minuet-style: binary search + weight-stationary). Full layer time =
+mapping + feature computation, geometric-mean over scenes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KernelMap, hybrid, offset_grid, output_stationary,
+                        pack_offsets, simple_bsearch, tune_threshold_cost_model,
+                        weight_stationary, zdelta_offsets, zdelta_search)
+from repro.core import hashmap
+from .common import emit, prep, scene_set, timeit, us
+
+LAYERS = [(16, 32, 3), (32, 32, 3), (64, 64, 3), (16, 16, 5), (32, 32, 5)]
+
+
+def run():
+    rows = []
+    for cin, cout, K in LAYERS:
+        geo = {"spira": [], "hash_os": [], "bsearch_ws": []}
+        for name, sc in scene_set()[:2]:
+            cs, _ = prep(sc)
+            _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+            offs = pack_offsets(jnp.asarray(offset_grid(K, 1)), sc.layout)
+            m = zdelta_search(cs, cs, anchors, zstep, K=K)
+            kmap = KernelMap(m=m, out_count=cs.count, in_count=cs.count)
+            cap = int(np.asarray(kmap.column_counts()).max()) + 8
+            feats = jax.random.normal(jax.random.key(0), (cs.capacity, cin))
+            w = jax.random.normal(jax.random.key(1), (K ** 3, cin, cout)) * 0.05
+            t_best = tune_threshold_cost_model(kmap, K=K, stride=1, cin=cin,
+                                               cout=cout).t_best
+
+            def spira(c, f, ww):
+                mm = zdelta_search(c, c, anchors, zstep, K=K)
+                km = KernelMap(m=mm, out_count=c.count, in_count=c.count)
+                return hybrid(f, km, ww, K=K, stride=1, t=t_best,
+                              ws_capacity=cap)
+
+            ts = hashmap.table_size_for(cs.capacity)
+
+            def hash_os(c, f, ww):
+                tk, tv = hashmap.build_table(c, table_size=ts)
+                mm = hashmap.hash_kernel_map(tk, tv, c, offs, K=K)
+                return output_stationary(f, mm, ww)
+
+            def bsearch_ws(c, f, ww):
+                mm = simple_bsearch(c, c, offs, K=K)
+                return weight_stationary(f, mm, ww, capacity=cap)
+
+            geo["spira"].append(timeit(jax.jit(spira), cs, feats, w, repeats=3))
+            geo["hash_os"].append(timeit(jax.jit(hash_os), cs, feats, w, repeats=3))
+            geo["bsearch_ws"].append(timeit(jax.jit(bsearch_ws), cs, feats, w, repeats=3))
+        gm = {k: float(np.exp(np.mean(np.log(v)))) for k, v in geo.items()}
+        for k, v in gm.items():
+            rows.append((f"fig8/l{cin}_{cout}_{K}/{k}", us(v),
+                         f"speedup_vs_hash={gm['hash_os'] / v:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

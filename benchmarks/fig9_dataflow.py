@@ -1,0 +1,46 @@
+"""Paper Fig. 9: layerwise Spira speedup with output-stationary,
+weight-stationary and hybrid dual-dataflow across thresholds t, for
+submanifold layer configs (Cin, Cout, K) with s_p = 1."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KernelMap, candidate_ts, hybrid, zdelta_offsets,
+                        zdelta_search)
+from .common import emit, prep, scene_set, timeit, us
+
+LAYERS = [(16, 16, 3), (32, 32, 3), (64, 64, 3), (16, 16, 5), (32, 32, 5),
+          (64, 96, 5)]
+
+
+def run():
+    rows = []
+    name, sc = scene_set()[0]
+    cs, _ = prep(sc)
+    for cin, cout, K in LAYERS:
+        _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+        m = zdelta_search(cs, cs, anchors, zstep, K=K)
+        kmap = KernelMap(m=m, out_count=cs.count, in_count=cs.count)
+        cap = int(np.asarray(kmap.column_counts()).max()) + 8
+        feats = jax.random.normal(jax.random.key(0), (cs.capacity, cin),
+                                  jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (K ** 3, cin, cout),
+                              jnp.float32) * 0.05
+        best = (None, np.inf)
+        for t in candidate_ts(K, 1):
+            fn = jax.jit(lambda f, km, ww, t=t: hybrid(
+                f, km, ww, K=K, stride=1, t=t, ws_capacity=cap))
+            dt = timeit(fn, feats, kmap, w, repeats=3)
+            label = {0: "ws"}.get(t, "os" if t == candidate_ts(K, 1)[-1]
+                                  else f"hybrid_t{t}")
+            rows.append((f"fig9/l{cin}_{cout}_{K}/{label}", us(dt), f"t={t}"))
+            if dt < best[1]:
+                best = (t, dt)
+        rows.append((f"fig9/l{cin}_{cout}_{K}/best", us(best[1]),
+                     f"t_best={best[0]}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper figure/table.
+
+``python -m benchmarks.run [fig ...]`` — prints ``name,us_per_call,derived``
+CSV rows. See benchmarks/common.py for the CPU-host measurement caveat;
+TPU roofline projections live in EXPERIMENTS.md (from the dry-run).
+"""
+import sys
+import traceback
+
+from . import (fig2_breakdown, fig3b_density, fig7_end2end, fig8_layerwise,
+               fig9_dataflow, fig10_mapping, fig11_ablation, fig12_networkwide)
+
+ALL = {
+    "fig2": fig2_breakdown.run,
+    "fig3b": fig3b_density.run,
+    "fig7": fig7_end2end.run,
+    "fig8": fig8_layerwise.run,
+    "fig9": fig9_dataflow.run,
+    "fig10": fig10_mapping.run,
+    "fig11": fig11_ablation.run,
+    "fig12": fig12_networkwide.run,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in which:
+        try:
+            ALL[name]()
+        except Exception as e:  # keep the harness running; report at end
+            traceback.print_exc()
+            failed.append((name, str(e)))
+    if failed:
+        for name, err in failed:
+            print(f"{name},FAILED,{err[:120]}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

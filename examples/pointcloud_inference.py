@@ -1,0 +1,55 @@
+"""End-to-end point-cloud inference: MinkUNet-42 on the Spira engine.
+
+Demonstrates network-wide voxel indexing (all 42 layers' coordinate sets +
+kernel maps built in ONE jitted graph at network start — Spira §5.5) and
+compares the three indexing engines end-to-end.
+
+Run:  PYTHONPATH=src python examples/pointcloud_inference.py
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_network_plan
+from repro.data import scenes
+from repro.models import pointcloud as pc
+
+net = pc.minkunet42(in_channels=4, n_classes=20)
+scene = scenes.outdoor_scene(seed=0, extent=(512, 512, 40))
+packed = jnp.asarray(scenes.pack_scene(scene))
+n = len(scene.coords)
+print(f"MinkUNet-42 on outdoor scene: {n} voxels")
+
+params = pc.init_pointcloud(jax.random.key(0), net)
+feats = jnp.zeros((packed.shape[0], 4)).at[:n].set(
+    jax.random.normal(jax.random.key(1), (n, 4)))
+
+
+@jax.jit
+def infer(raw, f):
+    # network-wide indexing: one module, all layers' kernel maps
+    plan = build_network_plan(raw, specs=net.conv_specs(), layout=scene.layout)
+    return pc.pointcloud_forward(params, net, plan, f)
+
+
+out = infer(packed, feats)
+jax.block_until_ready(out)
+t0 = time.perf_counter()
+out = infer(packed, feats)
+jax.block_until_ready(out)
+dt = time.perf_counter() - t0
+print(f"logits {out.shape}, finite={bool(np.isfinite(np.asarray(out)).all())}")
+print(f"steady-state end-to-end: {dt * 1e3:.1f} ms on {jax.devices()[0].platform}")
+
+for engine in ("bsearch", "hash"):
+    @jax.jit
+    def infer_e(raw, f, engine=engine):
+        plan = build_network_plan(raw, specs=net.conv_specs(),
+                                  layout=scene.layout, engine=engine)
+        return pc.pointcloud_forward(params, net, plan, f)
+
+    ref = infer_e(packed, feats)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    print(f"engine '{engine}' produces identical outputs ✓")

@@ -1,0 +1,39 @@
+"""Batched LM serving with the slot-based engine: prefill + continuous
+batched decode, mixed prompt lengths, greedy + sampled requests.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.models.common import dense_lm
+from repro.models import transformer as tf
+from repro.serve import Request, ServeEngine
+
+
+def main():
+    cfg = dense_lm("serve-mini", n_layers=4, d_model=128, n_heads=8, n_kv=4,
+                   d_ff=256, vocab=512, dtype="float32")
+    params, _ = tf.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch_slots=4, cache_len=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, (int(n),)).astype(np.int32),
+                    max_new=24, temperature=t)
+            for n, t in [(9, 0.0), (17, 0.0), (33, 0.8), (5, 0.0), (21, 0.0),
+                         (13, 0.8)]]
+    t0 = time.perf_counter()
+    eng.run(list(reqs))
+    dt = time.perf_counter() - t0
+    total_new = sum(len(r.out) for r in reqs)
+    print(f"{len(reqs)} requests on 4 slots -> {total_new} tokens "
+          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s on "
+          f"{jax.devices()[0].platform})")
+    for i, r in enumerate(reqs):
+        print(f"  req{i} prompt[{len(r.prompt)}] -> {r.out[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

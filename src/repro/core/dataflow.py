@@ -1,0 +1,136 @@
+"""Feature computation dataflows (Spira §5.4), TPU-native.
+
+Output-stationary (OS): gather + GEMM per offset, no filtering — wasted MACs
+on invalid entries but no merge step. Weight-stationary (WS): per-offset
+filtering/compaction of valid (input→output) pairs to a static capacity,
+GEMM over valid pairs only, then a *deterministic* merge. The GPU version
+merges with atomicAdd; TPU has no atomics, so the merge is a scatter with
+unique per-offset indices accumulated across offsets by the scan carry —
+bitwise-reproducible (DESIGN.md §2).
+
+Hybrid: a static L1-norm threshold t splits offsets into a dense set (OS)
+and a sparse set (WS); both partial results sum into the output. The split
+is host-static so XLA sees a fixed graph (kernel_map.l1_partition).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel_map import KernelMap, l1_partition
+
+
+def _mask_rows(x: jax.Array, count: jax.Array) -> jax.Array:
+    return jnp.where((jnp.arange(x.shape[0]) < count)[:, None], x, 0)
+
+
+# ---------------------------------------------------------------------------
+# output-stationary
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("fuse",))
+def output_stationary(
+    features: jax.Array,   # [N_cap, Cin]
+    m: jax.Array,          # int32 [M_cap, Kd]  (kernel-map column subset)
+    weights: jax.Array,    # [Kd, Cin, Cout]
+    *,
+    fuse: bool = False,
+) -> jax.Array:
+    """OS dataflow. ``fuse=True`` materializes one [M, Kd, Cin] gather and a
+    single MXU contraction (max utilization, Kd·Cin-deep); default scans
+    offsets with an [M, Cin] working set (memory-safe)."""
+    mc = m.shape[0]
+    if fuse:
+        idx = jnp.clip(m, 0)
+        g = features[idx] * (m >= 0)[..., None].astype(features.dtype)
+        return jnp.einsum("mkc,kcd->md", g, weights,
+                          preferred_element_type=jnp.float32).astype(features.dtype)
+
+    def body(acc, xs):
+        m_col, w_k = xs
+        g = features[jnp.clip(m_col, 0)] * (m_col >= 0)[:, None].astype(features.dtype)
+        return acc + jnp.dot(g, w_k, preferred_element_type=jnp.float32), None
+
+    acc0 = jnp.zeros((mc, weights.shape[-1]), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (m.T, weights))
+    return acc.astype(features.dtype)
+
+
+# ---------------------------------------------------------------------------
+# weight-stationary
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("capacity",))
+def weight_stationary(
+    features: jax.Array,   # [N_cap, Cin]
+    m: jax.Array,          # int32 [M_cap, Ks]
+    weights: jax.Array,    # [Ks, Cin, Cout]
+    *,
+    capacity: int,
+) -> jax.Array:
+    """WS dataflow with static per-offset pair capacity.
+
+    Valid pairs beyond ``capacity`` are dropped (choose capacity from the
+    tuner / column statistics; ``capacity = M_cap`` is always lossless).
+    The per-offset compaction is the TPU replacement for the paper's
+    filtering post-processing; the merge replaces atomicAdd (see module doc).
+    """
+    mc = m.shape[0]
+    rows = jnp.arange(mc, dtype=jnp.int32)
+
+    def body(acc, xs):
+        m_col, w_k = xs
+        valid = m_col >= 0
+        dest = jnp.where(valid, jnp.cumsum(valid) - 1, capacity)
+        in_idx = jnp.zeros((capacity,), jnp.int32).at[dest].set(
+            jnp.clip(m_col, 0), mode="drop")
+        out_idx = jnp.full((capacity,), mc, jnp.int32).at[dest].set(rows, mode="drop")
+        nvalid = valid.sum()
+        g = features[in_idx] * (jnp.arange(capacity) < nvalid)[:, None].astype(features.dtype)
+        part = jnp.dot(g, w_k, preferred_element_type=jnp.float32)  # [cap, Cout]
+        # out_idx unique within an offset -> plain (non-colliding) scatter-add
+        acc = acc.at[out_idx].add(part, mode="drop", unique_indices=True)
+        return acc, None
+
+    acc0 = jnp.zeros((mc, weights.shape[-1]), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (m.T, weights))
+    return acc.astype(features.dtype)
+
+
+def ws_overflow(kmap: KernelMap, cols: np.ndarray, capacity: int) -> jax.Array:
+    """Diagnostic: True if any selected column exceeds the WS capacity."""
+    return (kmap.column_counts()[cols] > capacity).any()
+
+
+# ---------------------------------------------------------------------------
+# hybrid dual-dataflow
+# ---------------------------------------------------------------------------
+
+def hybrid(
+    features: jax.Array,
+    kmap: KernelMap,
+    weights: jax.Array,    # [K^3, Cin, Cout]
+    *,
+    K: int,
+    stride: int,
+    t: int,
+    ws_capacity: int,
+    fuse_dense: bool = False,
+) -> jax.Array:
+    """Adaptive hybrid dataflow: offsets with L1 < t via OS, rest via WS.
+
+    t = 0 degenerates to full WS; t = L1NormMax+1 to full OS (paper §5.4).
+    """
+    dense_idx, sparse_idx = l1_partition(K, stride, t)
+    out = jnp.zeros((kmap.m.shape[0], weights.shape[-1]), features.dtype)
+    if dense_idx.size:
+        out = out + output_stationary(
+            features, kmap.m[:, dense_idx], weights[dense_idx], fuse=fuse_dense)
+    if sparse_idx.size:
+        out = out + weight_stationary(
+            features, kmap.m[:, sparse_idx], weights[sparse_idx], capacity=ws_capacity)
+    return out

@@ -1,0 +1,76 @@
+"""KernelMap container: map matrix + density statistics + dataflow split.
+
+The L1-Norm Density Property (Spira §4, property 3) drives the hybrid
+dataflow: per-offset kernel-map column density is tracked here, and the
+offset partition (dense → output-stationary, sparse → weight-stationary) is
+a *static*, host-side decision per layer (threshold t on the offset L1 norm),
+so the feature-computation graph is fully static for XLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .packing import offset_grid, offset_l1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KernelMap:
+    """``m[i, k] = j`` (−1 invalid), columns in z-delta group order."""
+
+    m: jax.Array          # int32 [M_cap, K^3]
+    out_count: jax.Array  # int32 scalar: valid output rows
+    in_count: jax.Array   # int32 scalar: valid input rows
+
+    def tree_flatten(self):
+        return (self.m, self.out_count, self.in_count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def k3(self) -> int:
+        return self.m.shape[1]
+
+    def column_density(self) -> jax.Array:
+        """Fraction of valid entries per offset column (among valid rows)."""
+        valid = (self.m >= 0).sum(axis=0).astype(jnp.float32)
+        return valid / jnp.maximum(self.out_count.astype(jnp.float32), 1.0)
+
+    def column_counts(self) -> jax.Array:
+        return (self.m >= 0).sum(axis=0).astype(jnp.int32)
+
+
+def l1_partition(K: int, stride: int, t: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Static offset split for the hybrid dataflow: offsets with
+    ``L1(δ) < t`` are *dense* (output-stationary), the rest *sparse*
+    (weight-stationary). ``t = 0`` → all sparse (full WS);
+    ``t = L1NormMax + 1`` → all dense (full OS). Offsets indexed in z-delta
+    group order (matching KernelMap columns)."""
+    offs = offset_grid(K, stride)
+    l1 = offset_l1(offs)
+    dense = np.nonzero(l1 < t)[0].astype(np.int32)
+    sparse = np.nonzero(l1 >= t)[0].astype(np.int32)
+    return dense, sparse
+
+
+def l1_norm_max(K: int, stride: int) -> int:
+    return 3 * ((K - 1) // 2) * stride
+
+
+def density_by_l1(kmap: KernelMap, K: int, stride: int) -> dict[int, float]:
+    """Average column density grouped by offset L1 norm (reproduces the
+    measurement behind the paper's Fig. 3b). Host-side helper."""
+    offs = offset_grid(K, stride)
+    l1 = offset_l1(offs)
+    dens = np.asarray(kmap.column_density())
+    out: dict[int, float] = {}
+    for v in sorted(set(l1.tolist())):
+        out[int(v)] = float(dens[l1 == v].mean())
+    return out

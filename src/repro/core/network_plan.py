@@ -1,0 +1,131 @@
+"""Network-wide voxel indexing (Spira §5.5).
+
+Key observation from the paper: the voxel-indexing step of every SpC layer
+is independent of every other layer's indexing *and* of all feature
+computation, because downsampled coordinates have the closed form
+``V_m = floor(V_0 / 2^m) * 2^m`` (Eq. 1) — no recursive dependency.
+
+GPU Spira exploits this with concurrent CUDA streams across SMs. The TPU
+adaptation: **one jitted graph** (`build_network_plan`) computes every
+level's coordinate set and every layer's kernel map from V0. XLA's scheduler
+is free to interleave the (data-independent) sort/search pipelines, and
+under a mesh the plan builder can be sharded so different devices index
+different layers (see dist/). Feature computation then consumes the plan's
+kernel maps layer by layer — indexing never sits on the critical path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .packing import BitLayout
+from .voxel import CoordSet, build_coord_set, downsample
+from .zdelta import zdelta_offsets, zdelta_search, simple_bsearch
+from .kernel_map import KernelMap
+from .spconv import SpConvSpec
+from . import hashmap
+from .packing import offset_grid, pack_offsets
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NetworkPlan:
+    """All coordinate sets (by stride level) + all kernel maps (by layer)."""
+
+    coords: Dict[int, CoordSet]       # level m -> coordinate set
+    kmaps: Dict[str, KernelMap]       # layer name -> kernel map
+
+    def tree_flatten(self):
+        ck = sorted(self.coords)
+        kk = sorted(self.kmaps)
+        return ([self.coords[k] for k in ck] + [self.kmaps[k] for k in kk],
+                (tuple(ck), tuple(kk)))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        ck, kk = aux
+        coords = dict(zip(ck, children[: len(ck)]))
+        kmaps = dict(zip(kk, children[len(ck):]))
+        return cls(coords, kmaps)
+
+
+def plan_levels(specs: Sequence[SpConvSpec]) -> Tuple[int, ...]:
+    lv = set()
+    for s in specs:
+        lv.add(s.m_in)
+        lv.add(s.m_out)
+    return tuple(sorted(lv))
+
+
+@partial(jax.jit, static_argnames=("specs", "layout", "engine"))
+def build_network_plan(
+    packed_raw: jax.Array,
+    *,
+    specs: Tuple[SpConvSpec, ...],
+    layout: BitLayout,
+    engine: str = "zdelta",   # "zdelta" | "bsearch" | "hash"
+) -> NetworkPlan:
+    """One-shot, network-wide indexing: a single XLA module containing every
+    layer's downsample + mapping, all derived from V0.
+
+    ``engine`` selects the mapping algorithm (zdelta = Spira; bsearch and
+    hash are the paper's baselines) so benchmarks compare within one code
+    path.
+    """
+    v0 = build_coord_set(packed_raw)
+    coords: Dict[int, CoordSet] = {}
+    for m in plan_levels(specs):
+        coords[m] = v0 if m == 0 else downsample(v0, layout, m)
+
+    kmaps: Dict[str, KernelMap] = {}
+    for s in specs:
+        inputs, outputs = coords[s.m_in], coords[s.m_out]
+        stride = s.offset_stride
+        if engine == "zdelta":
+            _, anchors, zstep = zdelta_offsets(s.K, stride, layout)
+            m = zdelta_search(inputs, outputs, anchors, zstep, K=s.K)
+        elif engine == "bsearch":
+            offs = pack_offsets(jnp.asarray(offset_grid(s.K, stride)), layout)
+            m = simple_bsearch(inputs, outputs, offs, K=s.K)
+        elif engine == "hash":
+            offs = pack_offsets(jnp.asarray(offset_grid(s.K, stride)), layout)
+            tk, tv = hashmap.build_table(
+                inputs, table_size=hashmap.table_size_for(inputs.capacity))
+            m = hashmap.hash_kernel_map(tk, tv, outputs, offs, K=s.K)
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
+        kmaps[s.name] = KernelMap(m=m, out_count=outputs.count, in_count=inputs.count)
+    return NetworkPlan(coords=coords, kmaps=kmaps)
+
+
+def sequential_plan_fns(specs: Tuple[SpConvSpec, ...], layout: BitLayout):
+    """Sequential-indexing baseline for the paper's Fig. 12: one jitted
+    downsample function per level and one jitted mapping function per layer,
+    each its own XLA module, called back-to-back — nothing can overlap
+    across layers (vs. the single fused module of build_network_plan)."""
+    @jax.jit
+    def sort_fn(packed_raw):
+        return build_coord_set(packed_raw)
+
+    level_fns = {}
+    for m in plan_levels(specs):
+        if m == 0:
+            continue
+        level_fns[m] = jax.jit(lambda c, m=m: downsample(c, layout, m))
+
+    map_fns = {}
+    for s in specs:
+        _, anchors, zstep = zdelta_offsets(s.K, s.offset_stride, layout)
+
+        def make(s=s, anchors=anchors, zstep=zstep):
+            @jax.jit
+            def one(inputs: CoordSet, outputs: CoordSet) -> KernelMap:
+                m = zdelta_search(inputs, outputs, anchors, zstep, K=s.K)
+                return KernelMap(m=m, out_count=outputs.count, in_count=inputs.count)
+            return one
+        map_fns[s.name] = make()
+    return sort_fn, level_fns, map_fns

@@ -1,0 +1,184 @@
+"""Packed-native voxel coordinate codec (Spira §5.3).
+
+Exploits the *Bounded Property*: voxel coordinates live in a finite grid
+``(Rx/gx, Ry/gy, Rz/gz)``, so each component fits in a small bit budget and a
+whole (batch, x, y, z) tuple packs into one int32 or int64. All voxel-indexing
+operators in this engine work *natively* on packed values:
+
+  * lexicographic order is preserved:  ``p > q  <=>  packed(p) > packed(q)``
+  * offset addition is preserved (within bounds):
+      ``packed(q) + packed_offset(d) == packed(q + d)``
+  * stride-2^m rounding is a bitwise AND with a precomputed mask.
+
+Packing happens once on the network's input coordinates; nothing downstream
+unpacks (the *packed-native* property).
+
+Guard-band contract
+-------------------
+Queries ``q + d`` may leave the grid. Packed addition then borrows/carries
+across fields, producing a word whose canonical digits differ by ±1 in the
+next field. To guarantee such words never *equal* a real packed coordinate
+(false-positive match), real coordinates must keep every field value inside
+``[guard, 2^b - guard)`` where ``guard >= max |d_component| = (K-1)/2 * s_p``.
+``BitLayout.for_extent`` sizes fields for ``extent + 2*guard`` and the data
+pipeline biases raw coordinates by ``+guard``. ``guard`` must be a power of
+two >= the deepest stride so that packed-native stride rounding (bitmask AND)
+commutes with the bias. Default guard = 16 (covers K<=9 at s_p<=8 and strides
+up to 16).
+
+64-bit packing uses jnp.int64 and therefore requires x64 (wrap call sites in
+``jax.experimental.enable_x64()``); the 32-bit path is the default everywhere,
+matching the paper's finding that 32-bit suffices for real workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BitLayout:
+    """Bit allocation (batch, x, y, z), most-significant field first.
+
+    Default mirrors the paper's evaluation split: 12/12/8 bits for x/y/z in a
+    32-bit word; the batch field is prepended. ``bits_total <= 31`` uses int32
+    (sign bit kept clear), otherwise int64 (``bits_total <= 63``).
+    """
+
+    bx: int = 12
+    by: int = 12
+    bz: int = 8
+    bb: int = 0  # batch bits (0 => single scene)
+
+    @property
+    def bits_total(self) -> int:
+        return self.bb + self.bx + self.by + self.bz
+
+    @property
+    def dtype(self):
+        if self.bits_total <= 31:
+            return jnp.int32
+        if self.bits_total <= 63:
+            return jnp.int64
+        raise ValueError(f"BitLayout too wide: {self.bits_total} bits")
+
+    # Shifts: z is least significant.
+    @property
+    def shift_z(self) -> int:
+        return 0
+
+    @property
+    def shift_y(self) -> int:
+        return self.bz
+
+    @property
+    def shift_x(self) -> int:
+        return self.bz + self.by
+
+    @property
+    def shift_b(self) -> int:
+        return self.bz + self.by + self.bx
+
+    def capacity(self) -> Tuple[int, int, int, int]:
+        """(batch, x, y, z) max representable exclusive bounds."""
+        return (1 << self.bb if self.bb else 1, 1 << self.bx, 1 << self.by, 1 << self.bz)
+
+    @classmethod
+    def for_extent(cls, ex: int, ey: int, ez: int, batch: int = 1,
+                   guard: int = 16) -> "BitLayout":
+        """Smallest layout covering a grid extent plus a ``guard`` band on
+        each side (see module docstring for the guard contract)."""
+        assert guard & (guard - 1) == 0, "guard must be a power of two"
+        need = lambda n: max(1, int(np.ceil(np.log2(max(2, int(n) + 2 * guard)))))
+        needb = lambda n: max(1, int(np.ceil(np.log2(max(2, int(n))))))
+        bb = 0 if batch <= 1 else needb(batch)
+        return cls(bx=need(ex), by=need(ey), bz=need(ez), bb=bb)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+def pack(coords: jax.Array, layout: BitLayout, batch: jax.Array | None = None) -> jax.Array:
+    """Pack integer coordinates ``coords[..., 3]`` (x, y, z ≥ 0) into one word.
+
+    ``batch`` (optional, same leading shape) goes in the most-significant
+    field. Works natively under jit; the output is sorted-order compatible
+    with lexicographic (batch, x, y, z) order.
+    """
+    dt = layout.dtype
+    x = coords[..., 0].astype(dt)
+    y = coords[..., 1].astype(dt)
+    z = coords[..., 2].astype(dt)
+    out = (x << layout.shift_x) | (y << layout.shift_y) | (z << layout.shift_z)
+    if batch is not None and layout.bb:
+        out = out | (batch.astype(dt) << layout.shift_b)
+    return out
+
+
+def pack_offsets(offsets: jax.Array, layout: BitLayout) -> jax.Array:
+    """Pack (possibly negative) weight offsets so that
+    ``pack(q) + pack_offsets(d) == pack(q + d)`` — signedness rides on field
+    arithmetic: a negative component contributes a borrow into the next field
+    which cancels exactly when the sum per-field is within range."""
+    dt = layout.dtype
+    dx = offsets[..., 0].astype(dt)
+    dy = offsets[..., 1].astype(dt)
+    dz = offsets[..., 2].astype(dt)
+    return (dx << layout.shift_x) + (dy << layout.shift_y) + (dz << layout.shift_z)
+
+
+def unpack(packed: jax.Array, layout: BitLayout) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`pack`. Returns (coords[..., 3], batch)."""
+    p = packed.astype(layout.dtype)
+    mask = lambda b: (1 << b) - 1
+    z = (p >> layout.shift_z) & mask(layout.bz)
+    y = (p >> layout.shift_y) & mask(layout.by)
+    x = (p >> layout.shift_x) & mask(layout.bx)
+    b = (p >> layout.shift_b) & mask(layout.bb) if layout.bb else jnp.zeros_like(x)
+    return jnp.stack([x, y, z], axis=-1).astype(jnp.int32), b.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# packed-native downsample rounding (Spira §5.3: bitwise mask)
+# ---------------------------------------------------------------------------
+
+def downsample_mask(layout: BitLayout, m: int) -> int:
+    """Mask clearing the low ``m`` bits of each of the x/y/z fields: AND-ing a
+    packed coordinate rounds every component down to a multiple of 2^m —
+    the packed-native form of ``floor(v / 2^m) * 2^m`` (Eq. 1)."""
+    full = (1 << layout.bits_total) - 1
+    clear = ((1 << m) - 1) << layout.shift_z
+    clear |= ((1 << m) - 1) << layout.shift_y
+    clear |= ((1 << m) - 1) << layout.shift_x
+    return full & ~clear
+
+
+def round_down(packed: jax.Array, layout: BitLayout, m: int) -> jax.Array:
+    if m == 0:
+        return packed
+    return packed & jnp.asarray(downsample_mask(layout, m), layout.dtype)
+
+
+# ---------------------------------------------------------------------------
+# offset enumeration Δ(K, s_p) with L1 norms and z-delta grouping
+# ---------------------------------------------------------------------------
+
+def offset_grid(K: int, stride: int = 1) -> np.ndarray:
+    """All K³ weight offsets Δ(K, s_p), ordered so that each consecutive run
+    of K offsets forms one *z-delta group*: identical (x, y), z ascending by
+    ``stride``. Row-major (x, y, z) enumeration has exactly this property.
+    Returns int32 [K^3, 3] (host-side; offsets are static per layer)."""
+    half = (K - 1) // 2
+    r = (np.arange(K) - half) * stride
+    g = np.stack(np.meshgrid(r, r, r, indexing="ij"), axis=-1)  # (K,K,K,3) x,y,z
+    return g.reshape(-1, 3).astype(np.int32)
+
+
+def offset_l1(offsets: np.ndarray) -> np.ndarray:
+    return np.abs(offsets).sum(axis=-1).astype(np.int32)

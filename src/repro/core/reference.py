@@ -1,0 +1,72 @@
+"""Gold oracles for the sparse-convolution engine.
+
+Two independent references:
+
+* ``kernel_map_reference`` — O(|Vq|·K³) dict-based kernel map on the host.
+* ``dense_conv_reference`` — scatter the sparse features into a dense grid
+  and run ``jax.lax.conv_general_dilated``; the ground truth for every
+  dataflow's numerics (submanifold and strided).
+
+Both are deliberately written with *none* of the engine's machinery (no
+packing, no sorting) so they cannot share bugs with it.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .packing import offset_grid
+
+
+def kernel_map_reference(in_coords: np.ndarray, out_coords: np.ndarray,
+                         K: int, stride: int) -> np.ndarray:
+    """Brute-force kernel map. coords are int [N,3] (unpacked, unique)."""
+    table = {tuple(c): i for i, c in enumerate(in_coords.tolist())}
+    offs = offset_grid(K, stride)
+    m = np.full((len(out_coords), K ** 3), -1, np.int32)
+    for i, q in enumerate(out_coords.tolist()):
+        for k, d in enumerate(offs.tolist()):
+            j = table.get((q[0] + d[0], q[1] + d[1], q[2] + d[2]))
+            if j is not None:
+                m[i, k] = j
+    return m
+
+
+def downsample_reference(coords: np.ndarray, m: int) -> np.ndarray:
+    """Unique sorted ``floor(v / 2^m) * 2^m`` (lexicographic order)."""
+    r = (coords >> m) << m
+    return np.unique(r, axis=0)
+
+
+def dense_conv_reference(in_coords: np.ndarray, features: np.ndarray,
+                         out_coords: np.ndarray, weights: np.ndarray,
+                         K: int, stride: int) -> np.ndarray:
+    """Dense ground truth via lax.conv_general_dilated.
+
+    Builds a dense grid over the coordinate bounding box, scatters features,
+    convolves with the K³ kernel (offsets ordered like ``offset_grid``), and
+    gathers the rows at ``out_coords``. ``stride`` here is the offset-grid
+    stride s_p (kernel dilation in dense terms), not the layer stride —
+    output coordinates are supplied explicitly.
+    """
+    cin = features.shape[1]
+    cout = weights.shape[2]
+    lo = np.minimum(in_coords.min(0), out_coords.min(0)) - (K - 1) // 2 * stride
+    hi = np.maximum(in_coords.max(0), out_coords.max(0)) + (K - 1) // 2 * stride
+    shape = (hi - lo + 1).astype(int)
+    grid = np.zeros((1, cin, *shape), features.dtype)
+    ic = in_coords - lo
+    grid[0, :, ic[:, 0], ic[:, 1], ic[:, 2]] = features
+    # weights [K^3, cin, cout] -> dense kernel [cout, cin, K, K, K]
+    w = weights.reshape(K, K, K, cin, cout).transpose(4, 3, 0, 1, 2)
+    out = jax.lax.conv_general_dilated(
+        jnp.asarray(grid), jnp.asarray(w),
+        window_strides=(1, 1, 1), padding="SAME",
+        rhs_dilation=(stride, stride, stride),
+        dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+    )
+    oc = out_coords - lo
+    # NB: the scalar batch index is itself an "advanced" index, so the
+    # broadcasted (M,) dims land first: result is [M, cout].
+    return np.asarray(out)[0, :, oc[:, 0], oc[:, 1], oc[:, 2]]

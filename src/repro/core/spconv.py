@@ -1,0 +1,79 @@
+"""SparseConv layer: parameters + feature computation over a KernelMap.
+
+The layer is purely functional (params in, features out); voxel indexing
+happens *outside* the layer, in the NetworkPlan (Spira's network-wide voxel
+indexing) — exactly the paper's decoupling of indexing from computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dataflow import hybrid, output_stationary, weight_stationary
+from .kernel_map import KernelMap, l1_norm_max
+
+Dataflow = Literal["os", "ws", "hybrid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpConvSpec:
+    """Static configuration of one sparse-convolution layer."""
+
+    name: str
+    cin: int
+    cout: int
+    K: int = 3
+    m_in: int = 0    # log2 input coordinate stride
+    m_out: int = 0   # log2 output coordinate stride (== m_in: submanifold)
+    dataflow: Dataflow = "os"
+    t: int = 0                    # hybrid threshold on offset L1 norm
+    ws_capacity: Optional[int] = None  # None -> lossless (M_cap)
+    fuse_dense: bool = False
+    bias: bool = True
+
+    @property
+    def submanifold(self) -> bool:
+        return self.m_in == self.m_out
+
+    @property
+    def offset_stride(self) -> int:
+        """Stride of the offset grid Δ(K, s): the finer of the two coordinate
+        strides (covers submanifold, downsampling, and inverse conv)."""
+        return 1 << min(self.m_in, self.m_out)
+
+    @property
+    def l1_max(self) -> int:
+        return l1_norm_max(self.K, self.offset_stride)
+
+
+def init_spconv(key: jax.Array, spec: SpConvSpec, dtype=jnp.float32) -> dict:
+    k3 = spec.K ** 3
+    fan_in = spec.cin * k3
+    w = jax.random.normal(key, (k3, spec.cin, spec.cout), dtype) / np.sqrt(fan_in)
+    p = {"w": w}
+    if spec.bias:
+        p["b"] = jnp.zeros((spec.cout,), dtype)
+    return p
+
+
+def apply_spconv(params: dict, spec: SpConvSpec, features: jax.Array,
+                 kmap: KernelMap) -> jax.Array:
+    """Feature computation with the spec's dataflow. Output rows beyond
+    ``kmap.out_count`` are zero."""
+    w = params["w"].astype(features.dtype)
+    cap = spec.ws_capacity or kmap.m.shape[0]
+    if spec.dataflow == "os":
+        out = output_stationary(features, kmap.m, w, fuse=spec.fuse_dense)
+    elif spec.dataflow == "ws":
+        out = weight_stationary(features, kmap.m, w, capacity=cap)
+    else:
+        out = hybrid(features, kmap, w, K=spec.K, stride=spec.offset_stride,
+                     t=spec.t, ws_capacity=cap, fuse_dense=spec.fuse_dense)
+    if spec.bias:
+        out = out + params["b"].astype(features.dtype)
+        out = jnp.where((jnp.arange(out.shape[0]) < kmap.out_count)[:, None], out, 0)
+    return out

@@ -1,0 +1,88 @@
+"""One-time per-layer dataflow threshold tuning (Spira §5.4).
+
+Same scheme as the paper (and Minuet/TorchSparse++/PCEngine): sample a few
+point clouds from the dataset, measure end-to-end layer latency for each
+integer threshold t ∈ {0, s_p, 2·s_p, …, L1NormMax+1}, pick the argmin.
+Happens once before inference; never on the serving path.
+
+Two modes:
+* ``measure``   — wall-clock the jitted layer on this host (honest on a real
+                  TPU; indicative on CPU).
+* ``cost_model``— analytic: OS cost ∝ Σ_dense |Vq|·Cin·Cout (wasted MACs on
+                  invalid entries included), WS cost ∝ Σ_sparse nnz_k·Cin·Cout
+                  + merge traffic. Deterministic and device-free; used by the
+                  dry-run path where wall-clock is meaningless.
+"""
+from __future__ import annotations
+
+import time
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .dataflow import hybrid
+from .kernel_map import KernelMap, l1_norm_max, l1_partition
+
+
+@dataclasses.dataclass
+class TuneResult:
+    t_best: int
+    per_t: dict[int, float]   # t -> latency seconds (or model cost)
+    mode: str
+
+
+def candidate_ts(K: int, stride: int) -> list[int]:
+    # t must be a multiple of s_p within (0, L1NormMax]; plus the two
+    # degenerate endpoints (full WS, full OS).
+    lmax = l1_norm_max(K, stride)
+    return [0] + list(range(stride, lmax + 1, stride)) + [lmax + 1]
+
+
+def tune_threshold_measure(
+    features: jax.Array,
+    kmap: KernelMap,
+    weights: jax.Array,
+    *,
+    K: int,
+    stride: int,
+    ws_capacity: int,
+    repeats: int = 3,
+) -> TuneResult:
+    per_t = {}
+    for t in candidate_ts(K, stride):
+        fn = jax.jit(lambda f, km, w, t=t: hybrid(
+            f, km, w, K=K, stride=stride, t=t, ws_capacity=ws_capacity))
+        fn(features, kmap, weights)[0].block_until_ready()  # compile+warm
+        tic = time.perf_counter()
+        for _ in range(repeats):
+            fn(features, kmap, weights).block_until_ready()
+        per_t[t] = (time.perf_counter() - tic) / repeats
+    t_best = min(per_t, key=per_t.get)
+    return TuneResult(t_best=t_best, per_t=per_t, mode="measure")
+
+
+def tune_threshold_cost_model(
+    kmap: KernelMap,
+    *,
+    K: int,
+    stride: int,
+    cin: int,
+    cout: int,
+    # relative cost of one scattered output-row merge vs one MAC row;
+    # calibrated once per platform (TPU: sort+segment ≈ a few row passes).
+    merge_cost_rows: float = 4.0,
+) -> TuneResult:
+    counts = np.asarray(kmap.column_counts()).astype(np.float64)
+    n_out = float(kmap.out_count)
+    per_t = {}
+    for t in candidate_ts(K, stride):
+        dense_idx, sparse_idx = l1_partition(K, stride, t)
+        os_macs = len(dense_idx) * n_out * cin * cout          # unfiltered
+        ws_macs = counts[sparse_idx].sum() * cin * cout        # filtered
+        ws_merge = counts[sparse_idx].sum() * cout * merge_cost_rows
+        per_t[t] = os_macs + ws_macs + ws_merge
+    t_best = min(per_t, key=per_t.get)
+    return TuneResult(t_best=t_best, per_t=per_t, mode="cost_model")

@@ -1,0 +1,91 @@
+"""Voxel coordinate set operations on packed coordinates.
+
+Everything here is packed-native (Spira §5.3): sorting, dedup and
+downsampling operate on single int words; no unpack/repack anywhere.
+
+Static-shape discipline: JAX needs static array sizes, so deduplicated
+coordinate sets keep their input-sized buffer with the *valid prefix* sorted
+ascending and the tail padded with ``PAD`` (int max), plus an explicit scalar
+count. Every downstream operator (z-delta search, dataflows) understands this
+(sorted-array + count) representation — PAD sorts after every real coordinate,
+which is exactly what binary search wants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .packing import BitLayout, round_down
+
+PAD32 = np.iinfo(np.int32).max
+PAD64 = np.iinfo(np.int64).max
+
+
+def pad_value(dtype) -> int:
+    return PAD64 if jnp.dtype(dtype) == jnp.int64 else PAD32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CoordSet:
+    """A sorted, deduplicated, padded set of packed voxel coordinates.
+
+    ``packed[: count]`` is strictly ascending; ``packed[count :] == PAD``.
+    """
+
+    packed: jax.Array  # int32/int64 [N_max]
+    count: jax.Array   # int32 scalar — number of valid coordinates
+
+    def tree_flatten(self):
+        return (self.packed, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.packed.shape[0]
+
+
+def build_coord_set(packed: jax.Array) -> CoordSet:
+    """Sort + dedup raw packed coordinates into a :class:`CoordSet`.
+
+    This is the *single* sort the whole network ever performs on coordinates
+    (Spira's key observation: sortedness then propagates through every layer).
+    """
+    pad = pad_value(packed.dtype)
+    n = packed.shape[0]
+    s = jnp.sort(packed)
+    # Dedup: keep first occurrence of each value; drop PAD.
+    keep = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    keep &= s != pad
+    count = keep.sum(dtype=jnp.int32)
+    # Compaction: kept elements are already in ascending order, so scattering
+    # element i to position cumsum(keep)-1 keeps order; dropped elements are
+    # sent out of bounds (index n) and eliminated by mode="drop".
+    dest = jnp.where(keep, jnp.cumsum(keep) - 1, n)
+    out = jnp.full((n,), pad, s.dtype).at[dest].set(s, mode="drop")
+    return CoordSet(packed=out, count=count)
+
+
+def downsample(coords: CoordSet, layout: BitLayout, m: int) -> CoordSet:
+    """Closed-form downsample to stride ``2^m`` (Spira §5.5, Eq. 1):
+    ``V_m = floor(V_0 / 2^m) * 2^m`` applied directly to *initial*
+    coordinates — one bitmask AND + sort/dedup. No recursive dependency on
+    intermediate layers, which is what makes network-wide indexing legal."""
+    pad = pad_value(coords.packed.dtype)
+    rounded = jnp.where(coords.packed == pad, pad, round_down(coords.packed, layout, m))
+    return build_coord_set(rounded)
+
+
+def downsample_all(v0: CoordSet, layout: BitLayout, levels: Tuple[int, ...]) -> Tuple[CoordSet, ...]:
+    """All downsample levels straight from V0 — the network-wide form. XLA
+    sees ``len(levels)`` independent sort/dedup pipelines in one graph and is
+    free to schedule them concurrently (TPU analogue of the paper's
+    multi-stream execution)."""
+    return tuple(downsample(v0, layout, m) for m in levels)

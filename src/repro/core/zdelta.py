@@ -1,0 +1,143 @@
+"""One-shot z-delta search kernel-map construction (Spira §5.2).
+
+The paper's central algorithm, adapted to TPU vector semantics:
+
+* **No pre-processing.** Coordinates are already sorted (sortedness is
+  established once at network input and propagates through every layer —
+  see ``voxel.build_coord_set`` / ``downsample``). There is no hash table,
+  no tile index, nothing to build.
+
+* **K² anchor searches instead of K³ full searches.** The K³ offsets are
+  grouped into K² *z-delta groups* of K offsets sharing (dx, dy) with dz
+  ascending by the input stride s_p (``packing.offset_grid`` emits exactly
+  this order). Only the group's first (anchor) query is resolved with a
+  binary search; the remaining K−1 queries are resolved by a *localized
+  probe* over at most K−1 consecutive array positions.
+
+* **Why the probe is sound (Integer Property).** All input coordinates with
+  the same (x, y) are multiples of s_p apart in z, so no packed value can lie
+  strictly between consecutive queries ``a + r*s`` and ``a + (r+1)*s``.
+  Invariant maintained below: at probe step r the cursor j satisfies
+  ``input[j] >= query_r``; a hit is equality; the cursor advances only on a
+  hit. Hence K consecutive queries touch at most K consecutive positions —
+  contiguous, cache/VMEM-friendly accesses instead of K³ independent
+  binary searches.
+
+On GPU the win is fewer global-memory round trips; on TPU the anchor search
+is a vectorized ``searchsorted`` (log N gather-compare steps on the VPU) and
+the probe is a short unrolled sequence of *contiguous* gathers — the same
+complexity argument, restated for a vector machine. The Pallas variant
+(kernels/zdelta_search.py) additionally stages the probed region in VMEM.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .packing import BitLayout, offset_grid, pack_offsets
+from .voxel import CoordSet, pad_value
+
+
+def zdelta_offsets(K: int, stride: int, layout: BitLayout) -> tuple[np.ndarray, jax.Array, int]:
+    """Static per-layer offset data: raw offsets [K^3,3] in z-delta group
+    order, packed anchors [K^2], and the packed z step."""
+    offs = offset_grid(K, stride)
+    anchors = offs.reshape(K * K, K, 3)[:, 0, :]  # first (smallest-z) of each group
+    packed_anchors = pack_offsets(jnp.asarray(anchors), layout)
+    zstep = stride << layout.shift_z  # packed(0,0,stride)
+    return offs, packed_anchors, zstep
+
+
+@partial(jax.jit, static_argnames=("K",))
+def zdelta_search(
+    inputs: CoordSet,
+    outputs: CoordSet,
+    packed_anchors: jax.Array,  # [K^2] packed anchor offsets
+    zstep: int | jax.Array,
+    *,
+    K: int,
+) -> jax.Array:
+    """Build the kernel map ``M[i, k] = j`` (or −1) in one shot.
+
+    Returns int32 [capacity(outputs), K^3] with columns in z-delta group
+    order (group g, member r → column g*K + r). Padded output rows are −1.
+    """
+    arr = inputs.packed                       # [N] sorted, PAD-tailed
+    n = arr.shape[0]
+    pad = pad_value(arr.dtype)
+    q0 = outputs.packed[:, None] + packed_anchors[None, :]       # [M, K^2] anchors
+    # --- one binary search per group anchor (the only O(log N) work) ---
+    pos = jnp.searchsorted(arr, q0, side="left").astype(jnp.int32)  # [M, K^2]
+
+    # --- localized probe for all K members, cursor advances on hit ---
+    cols = []
+    cursor = pos
+    query = q0
+    zs = jnp.asarray(zstep, arr.dtype)
+    for _ in range(K):
+        cand = arr[jnp.clip(cursor, 0, n - 1)]          # contiguous gather
+        hit = (cand == query) & (cursor < n) & (query != pad)
+        cols.append(jnp.where(hit, cursor, -1))
+        cursor = cursor + hit.astype(jnp.int32)
+        query = query + zs
+    # [M, K^2, K] -> [M, K^3] in group order
+    m = jnp.stack(cols, axis=-1).reshape(outputs.packed.shape[0], K * K * K)
+    # Padded output rows (outputs.packed == PAD) produce garbage queries that
+    # can never match (PAD + offset overflows past every real coordinate),
+    # but mask explicitly for robustness.
+    valid_row = (outputs.packed != pad)[:, None]
+    return jnp.where(valid_row, m, -1)
+
+
+@partial(jax.jit, static_argnames=("K",))
+def simple_bsearch(
+    inputs: CoordSet,
+    outputs: CoordSet,
+    packed_offsets: jax.Array,  # [K^3] packed offsets (any order)
+    *,
+    K: int,
+) -> jax.Array:
+    """Baseline from the paper's Fig. 10: one full binary search per query
+    (|Vq|·K³ searches), packed-native, no pre-processing. Identical output
+    layout to :func:`zdelta_search` when given group-ordered offsets."""
+    arr = inputs.packed
+    n = arr.shape[0]
+    pad = pad_value(arr.dtype)
+    q = outputs.packed[:, None] + packed_offsets[None, :]        # [M, K^3]
+    pos = jnp.searchsorted(arr, q, side="left").astype(jnp.int32)
+    cand = arr[jnp.clip(pos, 0, n - 1)]
+    hit = (cand == q) & (pos < n) & (outputs.packed[:, None] != pad)
+    return jnp.where(hit, pos, -1)
+
+
+def mirror_permutation(K: int) -> np.ndarray:
+    """Column permutation mapping offset δ to −δ under z-delta group order
+    (row-major (x,y,z) enumeration ⇒ mirror is index reversal)."""
+    return np.arange(K * K * K - 1, -1, -1)
+
+
+@partial(jax.jit, static_argnames=("K",))
+def symmetrize_kernel_map(m_half: jax.Array, outputs_count: jax.Array, *, K: int) -> jax.Array:
+    """Submanifold symmetry trick (Spira §5.4): given a kernel map whose
+    columns are filled only for the first ⌈K³/2⌉ offsets, fill column
+    ``mirror(k)`` via the identity  M[i, k] = j  ⇒  M[j, mirror(k)] = i.
+
+    Halves *search* work on TPU (the storage-layout motivation on GPU does
+    not transfer; see DESIGN.md §2). Valid only when outputs == inputs.
+    """
+    k3 = K * K * K
+    half = k3 // 2  # columns [0, half) searched; center column half is self-map
+    rows = jnp.arange(m_half.shape[0], dtype=jnp.int32)
+    out = m_half
+    mirror = k3 - 1  # mirror(c) = k3 - 1 - c
+    for c in range(half):
+        j = m_half[:, c]
+        valid = j >= 0
+        out = out.at[jnp.where(valid, j, m_half.shape[0]), mirror - c].set(
+            jnp.where(valid, rows, -1), mode="drop"
+        )
+    return out

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the engine's compute hot-spots.
+
+  masked_group_gemm — fused output-stationary feature computation
+  zdelta_window     — hierarchical (HBM->VMEM windowed) z-delta search
+  flash_attention   — IO-aware attention for the LM substrate
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jit'd dispatch
+wrapper in ops.py (Pallas on TPU, XLA elsewhere; interpret=True for CPU
+validation — see tests/test_kernels.py shape/dtype sweeps).
+"""
+from . import ops, ref
+from .masked_group_gemm import masked_group_gemm
+from .zdelta_window import zdelta_window_search
+from .flash_attention import flash_attention

@@ -1,0 +1,96 @@
+"""FlashAttention (forward) for the LM substrate — Pallas TPU.
+
+Standard IO-aware tiled attention: online softmax over KV blocks with
+running (m, l, acc) carried in VMEM scratch across the innermost grid axis.
+Causal masking is applied per-tile; fully-masked KV tiles are skipped with
+``pl.when`` so the causal schedule does ~half the MXU work.
+
+Layout: (BH, S, D) with BH = batch·heads folded (GQA expansion happens in
+ops.py by repeating KV heads at the wrapper level — zero-copy under XLA).
+Block sizes default to MXU-aligned (128, 128); D is the full head dim (TPU
+lane-friendly for 64/128/256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, causal, bq, bk, n_kv, offset):
+    # ``offset = Skv - Sq`` aligns the causal diagonal to the *end* of the KV
+    # sequence (decode-style query blocks over a longer cache).
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (ik * bk <= iq * bq + bq - 1 + offset)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                   # (bq, D)
+        k = k_ref[0]                                   # (bk, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows + offset >= cols, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1)[:, None]            # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)[:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+        m_ref[...], l_ref[...] = m_new, l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,   # (BH, Sq, D)
+    k: jax.Array,   # (BH, Skv, D)
+    v: jax.Array,   # (BH, Skv, D)
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    scale = 1.0 / (D ** 0.5)
+    grid = (BH, Sq // bq, Skv // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          n_kv=Skv // bk, offset=Skv - Sq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

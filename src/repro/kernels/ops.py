@@ -1,0 +1,47 @@
+"""Jit'd public wrappers: Pallas on TPU, XLA fallback elsewhere.
+
+Every op takes ``impl`` ∈ {"auto", "pallas", "xla"}; "auto" picks Pallas on
+TPU backends and XLA otherwise (so CPU dry-runs / smoke tests never trace a
+TPU kernel, while TPU runs get the fused path). ``interpret=True`` forces
+the Pallas body through the interpreter for CPU validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .masked_group_gemm import masked_group_gemm as _mgg_pallas
+from .flash_attention import flash_attention as _fa_pallas
+
+
+def _use_pallas(impl: str) -> bool:
+    if impl == "pallas":
+        return True
+    if impl == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def output_stationary_fused(features: jax.Array, m: jax.Array,
+                            weights: jax.Array, *, impl: str = "auto",
+                            interpret: bool = False) -> jax.Array:
+    """OS dataflow: XLA gather + (Pallas|XLA) masked grouped GEMM."""
+    gathered = features[jnp.clip(m, 0)]                # [M, Kd, Cin]
+    if _use_pallas(impl):
+        mc, kd, cin = gathered.shape
+        bm = 128 if mc % 128 == 0 else (8 if mc % 8 == 0 else 1)
+        cout = weights.shape[-1]
+        bn = 128 if cout % 128 == 0 else cout
+        return _mgg_pallas(m, gathered, weights, bm=bm, bn=bn, interpret=interpret)
+    return _ref.masked_group_gemm_ref(m, gathered, weights)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              impl: str = "auto", interpret: bool = False) -> jax.Array:
+    """(BH, S, D) attention; Pallas flash kernel on TPU, jnp reference off it."""
+    if _use_pallas(impl) and q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
+        return _fa_pallas(q, k, v, causal=causal, interpret=interpret)
+    return _ref.flash_attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_group_gemm_ref(m: jax.Array, gathered: jax.Array,
+                          weights: jax.Array) -> jax.Array:
+    """out[i] = Σ_k 1[m[i,k] >= 0] · gathered[i,k] @ weights[k]."""
+    g = gathered * (m >= 0)[..., None].astype(gathered.dtype)
+    out = jnp.einsum("mkc,kcd->md", g, weights, preferred_element_type=jnp.float32)
+    return out.astype(gathered.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True) -> jax.Array:
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool),
+                        k=k.shape[1] - q.shape[1])
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# zdelta_window_search's oracle is core.zdelta.zdelta_search (itself validated
+# against the brute-force dict reference in tests/test_core.py).

@@ -1,0 +1,122 @@
+"""Hierarchical z-delta search kernel — TPU-native form of Spira §5.2.
+
+The GPU algorithm's locality story (anchor binary search + ≤K−1 contiguous
+probes staying in cache lines) is restaged for the TPU memory hierarchy:
+
+  Phase A (XLA, cheap): per (output tile, anchor group), one `searchsorted`
+    for the tile's *first* anchor query gives the HBM window start. Because
+    outputs are sorted and offsets constant, all bm·K queries of the tile ×
+    group land in a bounded window after that start (geometric continuity →
+    windows are narrow in practice; measured in benchmarks/fig10).
+
+  Phase B (Pallas): grid (n_tiles, K²). The sorted input slice
+    ``arr[start : start + W]`` is DMA'd into VMEM (dynamic start from the
+    scalar-prefetched starts table), and all bm×K queries of the tile
+    resolve against it with vectorized equality search — a (bm, W)
+    broadcast-compare per group member on the VPU, no per-lane pointer
+    chasing. Matches beyond the static window are reported via an overflow
+    counter so the caller can fall back to the XLA path for those tiles
+    (none in practice for W ≥ 4·bm on surface scenes).
+
+So: binary-search count drops |Vq|·K³ → n_tiles·K² (Phase A), and the probe
+works on VMEM-resident contiguous data (Phase B) — the same two wins the
+paper claims, expressed with DMA + vector compares instead of cache lines.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.voxel import CoordSet, pad_value
+
+
+def _kernel(starts_ref,            # scalar-prefetch int32 [n_tiles, K2]
+            anchors_ref,           # scalar-prefetch [K2] packed anchors
+            out_block_ref,         # (1, bm) packed outputs (VMEM)
+            arr_hbm,               # full sorted input array (ANY/HBM)
+            m_ref,                 # out: (bm, 1, K) int32
+            ovf_ref,               # out: (1, 1) int32 overflow counter
+            win_ref,               # scratch VMEM (W,)
+            sem,                   # DMA semaphore
+            *, zstep, K, W, n):
+    t = pl.program_id(0)
+    g = pl.program_id(1)
+    start = jnp.clip(starts_ref[t, g], 0, n - W)
+    cp = pltpu.make_async_copy(arr_hbm.at[pl.ds(start, W)], win_ref, sem)
+    cp.start()
+    cp.wait()
+    win = win_ref[...]                                   # (W,) sorted slice
+    q0 = out_block_ref[0, :] + anchors_ref[g]            # (bm,) anchor queries
+    last_val = win[W - 1]
+    ovf = jnp.zeros((), jnp.int32)
+    for r in range(K):
+        q = q0 + r * zstep
+        eq = win[None, :] == q[:, None]                  # (bm, W) vector compare
+        hit = eq.any(axis=1)
+        idx = jnp.argmax(eq, axis=1).astype(jnp.int32) + start
+        m_ref[:, 0, r] = jnp.where(hit, idx, -1)
+        # a query above the window's last element may match beyond the DMA'd
+        # slice — count so the host can fall back for this tile.
+        ovf += ((q > last_val) & (start + W < n)).sum().astype(jnp.int32)
+    ovf_ref[0, 0] = ovf
+
+
+@functools.partial(jax.jit, static_argnames=("zstep", "K", "W", "bm", "interpret"))
+def zdelta_window_search(
+    inputs: CoordSet,
+    outputs: CoordSet,
+    packed_anchors: jax.Array,   # [K2]
+    zstep: int,
+    *,
+    K: int,
+    W: int = 512,
+    bm: int = 128,
+    interpret: bool = False,
+):
+    """Returns (kernel map [M, K³], overflow counts [n_tiles, K²])."""
+    arr = inputs.packed
+    n = arr.shape[0]
+    mcap = outputs.packed.shape[0]
+    assert mcap % bm == 0, (mcap, bm)
+    assert n >= W, f"input capacity {n} must be >= window {W}"
+    n_tiles = mcap // bm
+    k2 = K * K
+
+    # Phase A: one searchsorted per (tile, group) for the tile's first query.
+    out2d = outputs.packed.reshape(n_tiles, bm)
+    starts = jnp.searchsorted(
+        arr, out2d[:, 0][:, None] + packed_anchors[None, :], side="left"
+    ).astype(jnp.int32)                                  # [n_tiles, K2]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles, k2),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda t, g, *_: (t, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, 1, K), lambda t, g, *_: (t, g, 0)),
+            pl.BlockSpec((1, 1), lambda t, g, *_: (t, g)),
+        ],
+        scratch_shapes=[pltpu.VMEM((W,), arr.dtype), pltpu.SemaphoreType.DMA],
+    )
+    m3, ovf = pl.pallas_call(
+        functools.partial(_kernel, zstep=int(zstep), K=K, W=W, n=n),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((mcap, k2, K), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, k2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(starts, packed_anchors, out2d, arr)
+
+    m = m3.reshape(mcap, K * K * K)
+    pad = pad_value(arr.dtype)
+    m = jnp.where((outputs.packed != pad)[:, None], m, -1)
+    return m, ovf

@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds abstract params/optimizer/caches with production
+shardings, lowers the real train/prefill/decode step, compiles it for the
+16×16 (single-pod) or 2×16×16 (multi-pod) mesh, and records
+memory_analysis / cost_analysis / collective traffic for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]   # every applicable cell
+Results accumulate in dryrun_results.json (idempotent; cells are skipped if
+already present — delete the file to force).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES, applicable
+from repro.dist.sharding import param_shardings, sharding_ctx, spec_for
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_input_specs, train_input_specs
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig
+from repro.train import AdamWConfig, TrainConfig, init_opt_state, make_train_step
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "dryrun_results.json")
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def _state_shardings(state_shapes, mesh, cfg: ModelConfig, seq_shard: bool):
+    """Decode-cache shardings by leaf name/rank (see DESIGN.md §5 SP)."""
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        bsz = int(np.prod([mesh.shape[a] for a in batch])) if batch else 1
+        b = batch if (leaf.shape[1] % bsz == 0 and bsz > 1) else ()
+        model_ok = lambda d: d % mesh.shape["model"] == 0
+        if name in ("k", "v"):          # [L, B, S, KV, D]
+            if seq_shard and model_ok(leaf.shape[2]):
+                return P(None, b, "model", None, None)
+            if model_ok(leaf.shape[3]):
+                return P(None, b, None, "model", None)
+            if model_ok(leaf.shape[2]):  # kv heads indivisible: shard seq
+                return P(None, b, "model", None, None)
+            return P(None, b)
+        if name == "conv":               # [L, B, ck, di]
+            return P(None, b, None, "model" if model_ok(leaf.shape[3]) else None)
+        if name == "ssm":                # [L, B, di, ds]
+            return P(None, b, "model" if model_ok(leaf.shape[2]) else None, None)
+        if name == "C":                  # [L, B, H, dh, dh]
+            return P(None, b, "model" if model_ok(leaf.shape[2]) else None,
+                     None, None)
+        if name in ("n", "m"):
+            mo = "model" if (leaf.ndim > 2 and model_ok(leaf.shape[2])) else None
+            return P(None, b, *( [mo] if leaf.ndim > 2 else [] ))
+        if name in ("c", "h"):           # [L, B, dm]
+            return P(None, b, "model" if model_ok(leaf.shape[2]) else None)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [NamedSharding(mesh, spec(p, l)) for p, l in flat])
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               fsdp: bool = True, remat: bool = True,
+               seq_sp: bool = True, extra_tags: str = ""):
+    """Lower + compile one cell; returns the result record."""
+    from repro.dist.sharding import DEFAULT_RULES
+    shape = SHAPES[shape_name]
+    cfg = configs.get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    # shard the KV cache along sequence (split-K decode) when the context is
+    # huge or KV heads don't divide the model axis (e.g. musicgen's 24).
+    # The in-graph score constraint applies to DECODE only: during prefill
+    # it would reshard every [B,H,S,chunk] fp32 score tile per layer
+    # (measured 4.8 TB/dev on internlm2 — §Perf prefill iteration 1); the
+    # prefill *cache output* is still seq-sharded via out_shardings.
+    cache_seq_shard = shape.kind in ("decode", "prefill") and (
+        shape.seq_len >= 100_000 or cfg.n_kv % mesh.shape["model"] != 0)
+    seq_shard = cache_seq_shard and shape.kind == "decode"
+    rules = dict(DEFAULT_RULES)
+    if not seq_sp:
+        rules["seq_sp"] = ()
+    # opt-in experiment (§Perf jamba iter-2, REFUTED — resharding costs
+    # exceeded the replication it saved; kept for the record): shard the MoE
+    # capacity dim instead of experts for small expert counts
+    if os.environ.get("REPRO_MOE_CAPSHARD") == "1" and cfg.n_experts:
+        rules["experts"] = ()
+        rules["expert_ff"] = ()
+        rules["expert_cap"] = ("model",)
+    t0 = time.time()
+    with mesh, sharding_ctx(mesh, rules=rules, fsdp=fsdp, seq_shard=seq_shard):
+        pshapes, axes = tf.abstract_params(cfg)
+        pshard = param_shardings(axes, pshapes)
+        p_in = _sds(pshapes, pshard)
+
+        if shape.kind == "train":
+            oshapes = jax.eval_shape(
+                lambda: init_opt_state(pshapes, AdamWConfig()))
+            oshard = type(oshapes)(
+                mu=param_shardings(axes, oshapes.mu),
+                nu=param_shardings(axes, oshapes.nu),
+                step=NamedSharding(mesh, P()))
+            o_in = _sds(oshapes, oshard)
+            batch = train_input_specs(arch, cfg, shape, mesh)
+            step = make_train_step(cfg, TrainConfig(remat=remat, log_every=0))
+            fn = jax.jit(step, donate_argnums=(0, 1))
+            lowered = fn.lower(p_in, o_in, batch)
+        elif shape.kind == "prefill":
+            batch = train_input_specs(arch, cfg, shape, mesh)
+            batch.pop("labels")
+            # shard the produced KV/state caches explicitly (they dominate
+            # prefill output memory)
+            out_sh = jax.eval_shape(
+                lambda p, b: tf.prefill(p, cfg, b, shape.seq_len), pshapes,
+                batch)
+            st_sh = _state_shardings(out_sh[1], mesh, cfg, cache_seq_shard)
+            fn = jax.jit(lambda p, b: tf.prefill(p, cfg, b, shape.seq_len),
+                         out_shardings=(NamedSharding(mesh, P()), st_sh))
+            lowered = fn.lower(p_in, batch)
+        else:  # decode
+            sshapes = jax.eval_shape(
+                lambda: tf.init_decode_state(cfg, shape.global_batch,
+                                             shape.seq_len))
+            sshard = _state_shardings(sshapes, mesh, cfg, seq_shard)
+            s_in = _sds(sshapes, sshard)
+            batch, pos = decode_input_specs(arch, cfg, shape, mesh)
+            fn = jax.jit(lambda p, st, b, pp: tf.decode_step(p, cfg, st, b, pp),
+                         donate_argnums=(1,))
+            lowered = fn.lower(p_in, s_in, batch, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        r = rf.analyze(compiled)
+        coll = dict(r.by_collective)
+        coll["total"] = sum(coll.values())
+
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshapes))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev, "kind": shape.kind,
+        "fsdp": fsdp, "remat": remat, "tags": extra_tags,
+        "n_params": n_params,
+        "flops_per_device": r.flops,
+        "bytes_per_device": r.bytes_accessed,
+        "flops_naive_ca": r.flops_naive,
+        "bytes_naive_ca": r.bytes_naive,
+        "collective_bytes_per_device": r.collective_bytes,
+        "collectives": {k: v for k, v in coll.items()},
+        "arg_bytes_per_device": r.arg_bytes,
+        "temp_bytes_per_device": r.temp_bytes,
+        "t_compute": r.t_compute, "t_memory": r.t_memory,
+        "t_collective": r.t_collective,
+        "bottleneck": r.bottleneck,
+        "roofline_fraction": r.fraction_of_roofline(),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    return rec
+
+
+def lower_spc_cell(net_name: str, multi_pod: bool, *, scene_batch: int = 0,
+                   capacity: int = 65536, extra_tags: str = "",
+                   dataflow: str | None = None):
+    """Dry-run the paper's own workload at pod scale: a batch of voxel
+    scenes, one per chip (SpC inference is per-scene independent — the
+    natural deployment is scene-parallel over the full mesh), end-to-end
+    network-wide indexing + feature pass per scene via vmap."""
+    from repro.core.packing import BitLayout
+    from repro.core import build_network_plan
+    from repro.models import pointcloud as pc
+
+    if not scene_batch:
+        scene_batch = 512 if multi_pod else 256
+    dataflow = dataflow or os.environ.get("REPRO_SPC_DATAFLOW")
+    if dataflow:
+        net = pc.NETWORKS[net_name](in_channels=4, dataflow=dataflow)
+    else:
+        net = pc.NETWORKS[net_name](in_channels=4)
+    layout = BitLayout.for_extent(1024, 1024, 64, guard=16)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    all_axes = tuple(mesh.axis_names)
+    t0 = time.time()
+    with mesh, sharding_ctx(mesh):
+        pshapes = jax.eval_shape(
+            lambda: pc.init_pointcloud(jax.random.key(0), net, jnp.bfloat16))
+        p_in = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, P())),
+            pshapes)
+        bs = NamedSharding(mesh, P(all_axes))
+        packed = jax.ShapeDtypeStruct((scene_batch, capacity), jnp.int32,
+                                      sharding=bs)
+        feats = jax.ShapeDtypeStruct((scene_batch, capacity, 4), jnp.bfloat16,
+                                     sharding=bs)
+
+        def infer(params, packed, feats):
+            def one(pk, f):
+                plan = build_network_plan(pk, specs=net.conv_specs(),
+                                          layout=layout)
+                return pc.pointcloud_forward(params, net, plan, f)
+            return jax.vmap(one)(packed, feats)
+
+        lowered = jax.jit(infer).lower(p_in, packed, feats)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        r = rf.analyze(compiled)
+        coll = dict(r.by_collective)
+        coll["total"] = sum(coll.values())
+    rec = {
+        "arch": f"spc-{net_name}", "shape": f"scenes{scene_batch}",
+        "mesh": "2x16x16" if multi_pod else "16x16", "devices": n_dev,
+        "kind": "spc_infer", "tags": extra_tags,
+        "n_params": sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshapes)),
+        "flops_per_device": r.flops, "bytes_per_device": r.bytes_accessed,
+        "flops_naive_ca": r.flops_naive, "bytes_naive_ca": r.bytes_naive,
+        "collective_bytes_per_device": r.collective_bytes,
+        "collectives": coll,
+        "arg_bytes_per_device": r.arg_bytes,
+        "temp_bytes_per_device": r.temp_bytes,
+        "t_compute": r.t_compute, "t_memory": r.t_memory,
+        "t_collective": r.t_collective, "bottleneck": r.bottleneck,
+        "roofline_fraction": r.fraction_of_roofline(),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    return rec
+
+
+def _load():
+    try:
+        with open(RESULTS) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return {}
+
+
+def _save(res):
+    with open(RESULTS + ".tmp", "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+    os.replace(RESULTS + ".tmp", RESULTS)
+
+
+def cell_key(arch, shape, multi_pod, tags=""):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    k = f"{arch}|{shape}|{mesh}"
+    return f"{k}|{tags}" if tags else k
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-seq-sp", action="store_true")
+    ap.add_argument("--tags", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--spc", default=None,
+                    help="dry-run a point-cloud network (sparse_resnet21 | "
+                         "minkunet42 | centerpoint_large) instead of an LM")
+    args = ap.parse_args()
+
+    if args.spc:
+        nsc = 512 if args.multi_pod else 256
+        key = cell_key(f"spc-{args.spc}", f"scenes{nsc}", args.multi_pod,
+                       args.tags)
+        res = _load()
+        if key in res and not args.force:
+            print(f"[skip] {key}")
+            return
+        print(f"[lower+compile] {key} ...", flush=True)
+        try:
+            rec = lower_spc_cell(args.spc, args.multi_pod, extra_tags=args.tags)
+            res = _load()
+            res[key] = rec
+            _save(res)
+            print(f"[ok] {key}: bottleneck={rec['bottleneck']} "
+                  f"t=({rec['t_compute']:.3e},{rec['t_memory']:.3e},"
+                  f"{rec['t_collective']:.3e})s compile={rec['compile_s']}s",
+                  flush=True)
+        except Exception as e:
+            print(f"[FAIL] {key}: {e}")
+            traceback.print_exc()
+        return
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCHS:
+            cfg = configs.get_config(arch)
+            for sname, sh in SHAPES.items():
+                if applicable(cfg, sh):
+                    cells.append((arch, sname))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    res = _load()
+    for arch, sname in cells:
+        key = cell_key(arch, sname, args.multi_pod, args.tags)
+        if key in res and not args.force:
+            print(f"[skip] {key}")
+            continue
+        print(f"[lower+compile] {key} ...", flush=True)
+        try:
+            rec = lower_cell(arch, sname, args.multi_pod,
+                             fsdp=not args.no_fsdp, remat=not args.no_remat,
+                             seq_sp=not args.no_seq_sp, extra_tags=args.tags)
+            res = _load()
+            res[key] = rec
+            _save(res)
+            print(f"[ok] {key}: bottleneck={rec['bottleneck']} "
+                  f"t=({rec['t_compute']:.3e},{rec['t_memory']:.3e},"
+                  f"{rec['t_collective']:.3e})s "
+                  f"mem/dev={(rec['arg_bytes_per_device']+rec['temp_bytes_per_device'])/2**30:.2f}GiB "
+                  f"compile={rec['compile_s']}s", flush=True)
+        except Exception as e:
+            print(f"[FAIL] {key}: {e}")
+            traceback.print_exc()
+            res = _load()
+            res[key] = {"arch": arch, "shape": sname, "error": str(e)[:2000]}
+            _save(res)
+
+
+if __name__ == "__main__":
+    main()

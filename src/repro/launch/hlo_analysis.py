@@ -1,0 +1,258 @@
+"""Computation-aware static analysis of optimized HLO.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but scan-over-layers models execute it ``repeat`` times — without loop
+accounting every roofline term is off by ~the layer count. This analyzer
+
+  1. splits the HLO module into computations,
+  2. resolves each while's trip count from its condition computation
+     (ROOT compare against a constant),
+  3. walks the call graph from ENTRY accumulating multipliers
+     (nested scans multiply),
+  4. attributes, per computation × multiplier:
+       · FLOPs      — dot ops (2 · out_elems · contraction), convolutions
+       · HBM bytes  — *major-op traffic model*: operand+output bytes of ops
+         that genuinely stream HBM on a TPU (dot/conv, gather/scatter,
+         sort, dynamic-(update-)slice, copy/transpose, large reduce,
+         collectives). Elementwise chains and small CPU-backend fusions are
+         excluded — on TPU they fuse into their producers/consumers, and
+         counting every CPU-granularity fusion boundary inflates traffic
+         5–10×. This is a *lower-bound-flavored* HBM model; the bias is
+         stated in EXPERIMENTS.md §Methodology.
+       · collective bytes — ring-model bytes per op (see roofline.py)
+
+Cross-checked against cost_analysis on loop-free modules (test_roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .roofline import _DTYPE_BYTES, _ring_bytes
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->.*\{\s*$")
+_ASSIGN = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s+=\s+(.*)$")
+_TYPE = re.compile(r"^\(?([a-z0-9]+)\[([0-9,]*)\]")
+_OPCODE = re.compile(r"\]\S*\s+([a-z0-9\-]+)\(")
+_TUPLE_TYPES = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_WHILE = re.compile(r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:to_apply|calls|body|condition)=%?([\w.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "iota"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+# ops whose operands/outputs stream HBM on TPU (see module docstring)
+_MAJOR_OPS = {"dot", "convolution", "gather", "scatter", "sort", "copy",
+              "transpose", "dynamic-slice", "dynamic-update-slice", "reduce",
+              "reduce-window", "select-and-scatter", "pad", "concatenate",
+              "reverse", "cumsum"} | _COLLECTIVES
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    dtype: str
+    shape: Tuple[int, ...]
+    opcode: str
+    line: str
+    out_bytes: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    table: Dict[str, Instr]
+
+
+def _parse_type(rhs: str) -> Tuple[str, Tuple[int, ...], int]:
+    """(dtype, shape, total_bytes) — tuples sum their element sizes."""
+    m = _TYPE.match(rhs)
+    if rhs.startswith("("):
+        total = 0
+        for dt, sh in _TUPLE_TYPES.findall(rhs.split(")")[0]):
+            if dt in _DTYPE_BYTES:
+                n = _DTYPE_BYTES[dt]
+                for d in (int(x) for x in sh.split(",") if x):
+                    n *= d
+                total += n
+        return "tuple", (), total
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return "?", (), 0
+    dt = m.group(1)
+    shape = tuple(int(x) for x in m.group(2).split(",") if x)
+    n = _DTYPE_BYTES[dt]
+    for d in shape:
+        n *= d
+    return dt, shape, n
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_marker = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip()) if line and not line.startswith(" ") else None
+        if hdr and ("->" in line and line.strip().endswith("{")):
+            cur = Computation(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry_marker = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        am = _ASSIGN.match(line)
+        if not am:
+            continue
+        name, rhs = am.group(1), am.group(2)
+        dtype, shape, nbytes = _parse_type(rhs)
+        om = _OPCODE.search(rhs)
+        opcode = om.group(1) if om else rhs.split("(")[0].split()[-1]
+        ins = Instr(name=name, dtype=dtype, shape=shape, opcode=opcode,
+                    line=line, out_bytes=nbytes)
+        cur.instrs.append(ins)
+        cur.table[name] = ins
+    if entry_marker:
+        comps["__entry__"] = comps[entry_marker]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count from the condition's ROOT compare vs constant."""
+    root = None
+    for ins in cond.instrs:
+        if "ROOT" in ins.line:
+            root = ins
+    if root is None or "compare" not in root.line:
+        return 1
+    consts = {}
+    for ins in cond.instrs:
+        cm = _CONST.search(ins.line)
+        if cm and ins.opcode in ("constant",):
+            consts[ins.name] = int(cm.group(1))
+    for op in _OPERANDS.findall(root.line.split("compare(")[-1]):
+        if op in consts:
+            return max(1, consts[op])
+    return 1
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_flops_by_label: Dict[str, float] = dataclasses.field(default_factory=dict)
+    bytes_by_opcode: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_by_label: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+_OPNAME = re.compile(r'op_name="([^"]+)"')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _collective_bytes(ins: Instr, line: str) -> Tuple[str, float]:
+    op = ins.opcode.replace("-start", "")
+    g = 1
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        g = int(gm.group(2))
+    else:
+        gb = _GROUPS_BRACE.search(line)
+        if gb:
+            g = len(gb.group(1).split(","))
+    return op, _ring_bytes(op, ins.out_bytes, g)
+
+
+def analyze_module(hlo: str) -> HloCost:
+    comps = parse_module(hlo)
+    entry = comps.get("__entry__")
+    cost = HloCost()
+    if entry is None:
+        return cost
+
+    seen_stack: List[str] = []
+
+    def walk(comp: Computation, mult: float):
+        if comp.name in seen_stack:   # defensive: no recursion in HLO
+            return
+        seen_stack.append(comp.name)
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                wm = _WHILE.search(ins.line)
+                if wm and wm.group(1) in comps and wm.group(2) in comps:
+                    trips = _trip_count(comps[wm.group(1)])
+                    # loop state traffic once per iteration
+                    walk(comps[wm.group(2)], mult * trips)
+                    continue
+            if ins.opcode in ("call", "conditional", "async-start"):
+                for cal in _CALLS.findall(ins.line):
+                    if cal in comps:
+                        walk(comps[cal], mult)
+                continue
+            if ins.opcode in _SKIP_OPS:
+                continue
+            if ins.opcode in _MAJOR_OPS or (
+                    ins.opcode == "fusion" and any(
+                        w in ins.line for w in ("scatter", "gather(", "sort("))):
+                # bytes: output + resolvable operand sizes of HBM-streaming ops
+                nbytes = ins.out_bytes
+                for op in _OPERANDS.findall(ins.line.split("(", 1)[-1]):
+                    src = comp.table.get(op)
+                    if src is not None and src.name != ins.name:
+                        nbytes += src.out_bytes
+                cost.bytes += mult * nbytes
+                cost.bytes_by_opcode[ins.opcode] = \
+                    cost.bytes_by_opcode.get(ins.opcode, 0.0) + mult * nbytes
+            if ins.opcode in _COLLECTIVES:
+                op, moved = _collective_bytes(ins, ins.line)
+                cost.collective_bytes += mult * moved
+                cost.by_collective[op] = cost.by_collective.get(op, 0.0) + mult * moved
+                om = _OPNAME.search(ins.line)
+                lbl = f"{op}:{om.group(1).split('/')[-1] if om else '?'}" \
+                      f":{ins.dtype}{list(ins.shape)}"
+                cost.collective_by_label[lbl] = \
+                    cost.collective_by_label.get(lbl, 0.0) + mult * moved
+            if ins.opcode == "dot":
+                cm = _CONTRACT.search(ins.line)
+                contraction = 1
+                if cm:
+                    ops = _OPERANDS.findall(ins.line.split("dot(", 1)[-1])
+                    lhs = comp.table.get(ops[0]) if ops else None
+                    if lhs is not None:
+                        for d in (int(x) for x in cm.group(1).split(",") if x):
+                            if d < len(lhs.shape):
+                                contraction *= lhs.shape[d]
+                elems = 1
+                for d in ins.shape:
+                    elems *= d
+                fl = mult * 2.0 * elems * contraction
+                cost.flops += fl
+                om = _OPNAME.search(ins.line)
+                label = om.group(1) if om else "?"
+                label = label.split("/")[-2] if "/" in label else label
+                cost.dot_flops_by_label[label] = \
+                    cost.dot_flops_by_label.get(label, 0.0) + fl
+            elif ins.opcode == "convolution":
+                # rough: 2 · out_elems · (kernel window · in_channels) — use
+                # operand-size heuristic: 2·out·op0_last_dims; convs are rare
+                # in these models, keep simple
+                elems = 1
+                for d in ins.shape:
+                    elems *= d
+                cost.flops += mult * 2.0 * elems
+        seen_stack.pop()
+
+    walk(entry, 1.0)
+    return cost

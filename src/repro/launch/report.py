@@ -1,0 +1,87 @@
+"""Generate the §Dry-run and §Roofline tables for EXPERIMENTS.md from
+dryrun_results.json.
+
+  python -m repro.launch.report [--json dryrun_results.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+V5E_HBM = 16 * 2 ** 30  # 16 GiB per chip
+
+ACTIVE_PARAMS = {
+    # MoE: active = non-expert + top_k/E × expert params (computed below);
+    # dense: all params. Filled at runtime from config math.
+}
+
+
+def active_params(arch: str, n_params: int) -> float:
+    if arch not in configs.ARCHS:   # spc-* pseudo-archs: all params active
+        return float(n_params)
+    cfg = configs.get_config(arch)
+    if cfg.n_experts:
+        # expert share of total params
+        k3 = None
+        e_params = 0
+        for sb in cfg.superblocks:
+            n_moe = sum(1 for _, f in sb.blocks if f == "moe") * sb.repeat
+            e_params += n_moe * cfg.n_experts * (3 * cfg.d_model * cfg.d_ff_expert)
+        frac_active = cfg.top_k / cfg.n_experts
+        return n_params - e_params + e_params * frac_active
+    return float(n_params)
+
+
+def fmt_t(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        res = json.load(f)
+
+    rows = []
+    for key, v in sorted(res.items()):
+        if "error" in v:
+            rows.append(f"| {key} | ERROR: {v['error'][:60]} |")
+            continue
+        mem = (v["arg_bytes_per_device"] + v["temp_bytes_per_device"]) / 2 ** 30
+        if v["shape"] in SHAPES:
+            shape = SHAPES[v["shape"]]
+            tokens = shape.global_batch * (
+                shape.seq_len if v["kind"] != "decode" else 1)
+            na = active_params(v["arch"], v["n_params"])
+            mf = (6.0 if v["kind"] == "train" else 2.0) * na * tokens / v["devices"]
+            useful = f"{mf / max(v['flops_per_device'], 1):.2f}"
+        else:
+            useful = "—"   # spc scene cells: MODEL_FLOPS=6ND inapplicable
+        tag = v.get("tags") or ""
+        fits = "✓" if mem * 2 ** 30 <= V5E_HBM else f"✗ ({mem:.0f}GiB)"
+        rows.append(
+            f"| {v['arch']}{'·' + tag if tag else ''} | {v['shape']} | "
+            f"{v['mesh']} | "
+            f"{fmt_t(v['t_compute'])} | {fmt_t(v['t_memory'])} | "
+            f"{fmt_t(v['t_collective'])} | **{v['bottleneck']}** | "
+            f"{useful} | {mem:.2f} | {fits} |")
+
+    print("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
+          "t_collective (s) | bottleneck | MODEL/HLO flops | mem GiB/dev | "
+          "fits v5e |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(r)
+    print()
+    print(f"Constants: peak={PEAK_FLOPS/1e12:.0f} TF/s bf16, "
+          f"HBM={HBM_BW/1e9:.0f} GB/s, link={LINK_BW/1e9:.0f} GB/s. "
+          "All terms per device (per-partition HLO).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all *per device* (the partitioned
+HLO module is per-device, so cost_analysis numbers already are):
+
+  compute    = HLO_FLOPs / peak_FLOPs_chip          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw                   (819 GB/s)
+  collective = Σ ring_bytes(op) / link_bw           (~50 GB/s/link ICI)
+
+Collective bytes are parsed from the partitioned HLO text (they are NOT in
+cost_analysis): for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute the result shape, dtype, and replica-group
+size give the per-device bytes actually moved under ring algorithms:
+
+  all-reduce     2·S·(g−1)/g      (reduce-scatter + all-gather)
+  all-gather     S·(g−1)/g        (S = full gathered result)
+  reduce-scatter S_out·(g−1)
+  all-to-all     S·(g−1)/g
+  collective-permute  S
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e)
+HBM_BW = 819e9          # bytes/s
+LINK_BW = 50e9          # bytes/s per ICI link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?(?P<dtype>[a-z0-9]+)\[(?P<shape>[0-9,]*)\][^)]*?\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    op: str
+    dtype: str
+    shape: tuple
+    group_size: int
+    result_bytes: int
+    moved_bytes: float
+
+
+def _ring_bytes(op: str, size: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * size * (g - 1) / g
+    if op == "all-gather":
+        return size * (g - 1) / g
+    if op == "reduce-scatter":
+        return float(size) * (g - 1)
+    if op == "all-to-all":
+        return size * (g - 1) / g
+    if op == "collective-permute":
+        return float(size)
+    return 0.0
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        dtype = m.group("dtype")
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in m.group("shape").split(",") if x)
+        size = _DTYPE_BYTES[dtype]
+        for d in shape:
+            size *= d
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            if gb:
+                g = len(gb.group(1).split(","))
+        out.append(CollectiveOp(op=op, dtype=dtype, shape=shape, group_size=g,
+                                result_bytes=size,
+                                moved_bytes=_ring_bytes(op, size, g)))
+    return out
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, float]:
+    summary: Dict[str, float] = {}
+    for o in ops:
+        summary[o.op] = summary.get(o.op, 0.0) + o.moved_bytes
+    summary["total"] = sum(v for k, v in summary.items() if k != "total")
+    return summary
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    arg_bytes: int
+    temp_bytes: int
+    flops_naive: float = 0.0     # cost_analysis (while bodies counted once)
+    bytes_naive: float = 0.0
+    by_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Roofline lower bound on step time = max of the three terms
+        (perfect overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def fraction_of_roofline(self) -> float:
+        """How much of the bound is the compute term — 1.0 means perfectly
+        compute-bound (the best place to be)."""
+        return self.t_compute / max(self.step_time_lb, 1e-30)
+
+
+def analyze(compiled) -> Roofline:
+    """Loop-aware roofline terms. FLOPs/bytes/collectives come from the
+    computation-walking analyzer in hlo_analysis.py (``cost_analysis``
+    counts while bodies once — wrong for scan-over-layers models; see
+    tests/test_roofline.py). Raw cost_analysis totals are kept alongside
+    for cross-checking."""
+    from .hlo_analysis import analyze_module  # local import: avoid cycle
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    hc = analyze_module(compiled.as_text())
+    return Roofline(
+        flops=hc.flops,
+        bytes_accessed=hc.bytes,
+        collective_bytes=hc.collective_bytes,
+        arg_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+        temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+        flops_naive=float(ca.get("flops", 0.0)),
+        bytes_naive=float(ca.get("bytes accessed", 0.0)),
+        by_collective=dict(hc.by_collective),
+    )
+
+
+_ASSIGN_RE = re.compile(r"%([\w.\-]+) = ([a-z0-9]+)\[([0-9,]*)\]")
+_DOT_RE = re.compile(
+    r"%([\w.\-]+) = [a-z0-9]+\[([0-9,]*)\][^=]*? dot\(%([\w.\-]+), %([\w.\-]+)\),"
+    r" lhs_contracting_dims=\{([0-9,]*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def dot_flops_by_opname(hlo_text: str, top: int = 25):
+    """Static per-dot FLOP attribution grouped by the op_name metadata label
+    (einsum spec). NOTE: ops inside while/scan bodies are counted ONCE —
+    multiply by the trip count when interpreting scan-over-layers models.
+    Use for *ranking* hot ops, not absolute totals (cost_analysis has those).
+    """
+    shapes = {}
+    for m in _ASSIGN_RE.finditer(hlo_text):
+        shapes[m.group(1)] = tuple(int(x) for x in m.group(3).split(",") if x)
+    agg: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        dm = _DOT_RE.search(line)
+        if not dm:
+            continue
+        out_shape = tuple(int(x) for x in dm.group(2).split(",") if x)
+        lhs = shapes.get(dm.group(3), ())
+        cdims = [int(x) for x in dm.group(5).split(",") if x]
+        contraction = 1
+        for d in cdims:
+            if d < len(lhs):
+                contraction *= lhs[d]
+        fl = 2.0 * contraction
+        for d in out_shape:
+            fl *= d
+        om = _OPNAME_RE.search(line)
+        label = om.group(1).split("jit(")[-1] if om else "?"
+        agg[label] = agg.get(label, 0.0) + fl
+    return sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+
+
+def model_flops(n_params_active: float, n_tokens: float,
+                train: bool) -> float:
+    """6·N·D for training, 2·N·D for inference forward (per whole step,
+    global). Used for the MODEL_FLOPS / HLO_FLOPs usefulness ratio."""
+    per_tok = 6.0 * n_params_active if train else 2.0 * n_params_active
+    return per_tok * n_tokens

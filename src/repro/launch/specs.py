@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell.
+
+Follows the shannon/kernels pattern: weak-type-correct, shardable, zero
+allocation. ``input_specs`` returns the exact pytrees the lowered function
+will be called with.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import ShapeSpec
+from repro.models.common import ModelConfig
+
+
+def _batch_spec(mesh: Mesh, global_batch: int) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if global_batch % size == 0:
+        return P(tuple(axes))
+    if "pod" in mesh.axis_names and global_batch % mesh.shape["pod"] == 0:
+        return P("pod")
+    return P()
+
+
+def train_input_specs(arch: str, cfg: ModelConfig, shape: ShapeSpec,
+                      mesh: Mesh) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    bs = NamedSharding(mesh, _batch_spec(mesh, B))
+    pre = configs.embed_prefix_len(arch, S)
+    batch = {}
+    if cfg.embedding_inputs:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16, sharding=bs)
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bs)
+        return batch
+    if pre:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, pre, cfg.d_model),
+                                               jnp.bfloat16, sharding=bs)
+    batch["tokens"] = jax.ShapeDtypeStruct((B, S - pre), jnp.int32, sharding=bs)
+    batch["labels"] = jax.ShapeDtypeStruct((B, S - pre), jnp.int32, sharding=bs)
+    return batch
+
+
+def decode_input_specs(arch: str, cfg: ModelConfig, shape: ShapeSpec,
+                       mesh: Mesh) -> Tuple[dict, jax.ShapeDtypeStruct]:
+    """(token batch, pos scalar) for decode_step."""
+    B = shape.global_batch
+    bs = NamedSharding(mesh, _batch_spec(mesh, B))
+    if cfg.embedding_inputs:
+        batch = {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                                jnp.bfloat16, sharding=bs)}
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=bs)}
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return batch, pos

@@ -1,0 +1,2 @@
+from .common import ModelConfig, SuperBlock, dense_lm, moe_lm
+from . import transformer, layers, moe, mamba, xlstm, pointcloud

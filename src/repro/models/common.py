@@ -1,0 +1,173 @@
+"""Model substrate: configs, logical sharding axes, shared layer math.
+
+Parameters are plain nested dicts of arrays. Every parameter is created
+through :func:`param` with *logical axis names*; ``abstract_params`` mirrors
+``init_params`` exactly (same code path, eval_shape) so the dry-run can
+derive shardings without allocating. Logical→mesh resolution lives in
+``dist/sharding.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+BlockKind = Literal["attn", "mamba", "mlstm", "slstm"]
+FfnKind = Literal["dense", "moe", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperBlock:
+    """A repeated group of sub-layers. The model scans over ``repeat``
+    instances of this group; within the group, sub-layers are unrolled.
+    One HLO body per distinct SuperBlock → compile time independent of
+    total depth."""
+
+    blocks: Tuple[Tuple[BlockKind, FfnKind], ...]
+    repeat: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    superblocks: Tuple[SuperBlock, ...]
+    act: Literal["silu", "gelu"] = "silu"          # GLU gate activation
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # Mamba
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_conv: int = 4
+    # xLSTM
+    lstm_proj_factor: float = 2.0
+    # misc
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embedding_inputs: bool = False   # VLM/audio stubs: inputs are embeddings
+    dtype: str = "bfloat16"
+    # long-context behaviour (which shapes are legal; see configs/)
+    subquadratic: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return sum(sb.repeat * len(sb.blocks) for sb in self.superblocks)
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def dense_lm(name: str, n_layers: int, d_model: int, n_heads: int, n_kv: int,
+             d_ff: int, vocab: int, head_dim: Optional[int] = None,
+             act: str = "silu", **kw) -> ModelConfig:
+    return ModelConfig(
+        name=name, d_model=d_model, n_heads=n_heads, n_kv=n_kv,
+        head_dim=head_dim or d_model // n_heads, d_ff=d_ff, vocab=vocab,
+        superblocks=(SuperBlock(blocks=(("attn", "dense"),), repeat=n_layers),),
+        act=act, **kw)
+
+
+def moe_lm(name: str, n_layers: int, d_model: int, n_heads: int, n_kv: int,
+           d_ff_expert: int, vocab: int, n_experts: int, top_k: int,
+           head_dim: Optional[int] = None, **kw) -> ModelConfig:
+    return ModelConfig(
+        name=name, d_model=d_model, n_heads=n_heads, n_kv=n_kv,
+        head_dim=head_dim or d_model // n_heads, d_ff=0, vocab=vocab,
+        superblocks=(SuperBlock(blocks=(("attn", "moe"),), repeat=n_layers),),
+        n_experts=n_experts, top_k=top_k, d_ff_expert=d_ff_expert, **kw)
+
+
+# ---------------------------------------------------------------------------
+# parameter creation with logical axes
+# ---------------------------------------------------------------------------
+
+class ParamCtx:
+    """Collects (path → logical axes) while parameters are initialized."""
+
+    def __init__(self, key: jax.Array, dtype):
+        self._key = key
+        self.dtype = dtype
+        self.axes: dict[str, Tuple[Optional[str], ...]] = {}
+        self._path: list[str] = []
+
+    def scope(self, name: str):
+        ctx = self
+
+        class _S:
+            def __enter__(self):
+                ctx._path.append(name)
+
+            def __exit__(self, *a):
+                ctx._path.pop()
+
+        return _S()
+
+    def key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name: str, shape: Tuple[int, ...],
+              logical: Tuple[Optional[str], ...],
+              init: str = "normal", scale: Optional[float] = None) -> jax.Array:
+        assert len(shape) == len(logical), (name, shape, logical)
+        path = "/".join(self._path + [name])
+        self.axes[path] = logical
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(self.key(), shape, jnp.float32) * s).astype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# shared math
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (1.0 + g.astype(x.dtype))
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D], positions: [..., S]."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :].astype(x.dtype)
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy in fp32. logits [..., V], labels [...]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,199 @@
+"""Attention (GQA + RoPE) and dense GLU FFN blocks.
+
+Attention computes in grouped form [B, KV, G, S, D] (G = heads per KV head)
+so GQA never materializes repeated KV. Full-sequence attention is flash-style
+chunked in pure JAX (scan over KV chunks with online softmax) to bound the
+score working set — the Pallas kernel (kernels/flash_attention.py) replaces
+it on real TPUs via kernels/ops.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamCtx, act_fn, rms_norm, rope
+from repro.dist.sharding import seq_shard_active, shard_act
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked grouped attention (pure JAX flash-style)
+# ---------------------------------------------------------------------------
+
+def grouped_attention(
+    q: jax.Array,       # [B, Sq, H, D]
+    k: jax.Array,       # [B, Sk, KV, D]
+    v: jax.Array,       # [B, Sk, KV, D]
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0]
+    kv_len: Optional[jax.Array] = None,  # valid kv prefix (decode masking)
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style chunked attention in *expanded-H* layout: KV heads are
+    repeated to H per chunk (a few MB), so scores/context carry the full H
+    dim and shard over the model axis even when KV < model size — the
+    Megatron GQA-TP mapping. Scores exist only per (kv_chunk) slice."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Sk = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    qf = (q * scale).astype(q.dtype)
+    kv_chunk = min(kv_chunk, Sk)
+    n_chunks = Sk // kv_chunk if Sk % kv_chunk == 0 else 1
+    if Sk % kv_chunk != 0:
+        kv_chunk = Sk
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)
+
+    def chunk(ci, carry):
+        m_prev, l_prev, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ci * kv_chunk, kv_chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ci * kv_chunk, kv_chunk, axis=1)
+        if G > 1:  # chunk-local head expansion (bytes: kv_chunk·H·D only)
+            ks = jnp.repeat(ks, G, axis=2)
+            vs = jnp.repeat(vs, G, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, ks,
+                       preferred_element_type=jnp.float32)
+        if seq_shard_active():
+            # long-context decode: scores follow the seq-sharded cache; the
+            # softmax over the sharded dim becomes partial-max/sum + psum
+            # (flash-decoding split-K, emitted by the SPMD partitioner).
+            s = shard_act(s, ("batch", None, None, "kv_seq"))
+        else:
+            s = shard_act(s, ("batch", "heads", None, None))
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((B, Sq, kv_chunk), bool)
+        if causal:
+            mask &= (q_pos[:, None] >= kpos[None, :])[None]
+        if kv_len is not None:
+            kl = jnp.broadcast_to(jnp.asarray(kv_len), (B,))
+            mask &= kpos[None, None, :] < kl[:, None, None]
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(v.dtype), vs,
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    if n_chunks == 1:
+        # single-pass (decode over a possibly seq-sharded cache): flat graph
+        # so the SPMD partitioner sees the softmax over the sharded KV dim
+        # and emits the flash-decoding-style partial-max/sum all-reduces.
+        m, l, acc = chunk(0, (m0, l0, a0))
+    else:
+        m, l, acc = jax.lax.fori_loop(0, n_chunks, chunk, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B, Sq, H, D]
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+def attn_init(ctx: ParamCtx, cfg: ModelConfig) -> dict:
+    H, KV, D, dm = cfg.n_heads, cfg.n_kv, cfg.head_dim, cfg.d_model
+    return {
+        "norm": ctx.param("norm", (dm,), ("d_model",), init="zeros"),
+        "wq": ctx.param("wq", (dm, H, D), ("d_model_fsdp", "heads", None)),
+        "wk": ctx.param("wk", (dm, KV, D), ("d_model_fsdp", "kv_heads", None)),
+        "wv": ctx.param("wv", (dm, KV, D), ("d_model_fsdp", "kv_heads", None)),
+        "wo": ctx.param("wo", (H, D, dm), ("heads", None, "d_model_fsdp")),
+    }
+
+
+def _qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", h, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", h, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", h, p["wv"].astype(x.dtype))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v                                   # [B,S,H,D], [B,S,KV,D]×2
+
+
+def attn_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
+             positions: jax.Array) -> jax.Array:
+    """Full-sequence causal attention (training / prefill compute)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    o = grouped_attention(q, k, v, causal=True)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    return x + shard_act(out, ("batch", "seq", "d_model"))
+
+
+def attn_prefill(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                 cache_len: int):
+    """Prefill: same compute as fwd, also returns the populated KV cache
+    padded to ``cache_len``."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    o = grouped_attention(q, k, v, causal=True)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    S = x.shape[1]
+    pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+    cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    return x + out, cache
+
+
+def attn_step(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+              pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """Decode one token against a static-size KV cache. ``pos`` is the
+    number of tokens already cached — scalar, or [B] for slot-batched
+    serving (continuous batching)."""
+    B = x.shape[0]
+    pos = jnp.asarray(pos)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim else pos,
+                                 (B, 1)).astype(jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    if pos.ndim == 0:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+    else:  # per-slot positions: batched scatter
+        bidx = jnp.arange(B)
+        kc = cache["k"].at[bidx, positions[:, 0]].set(k[:, 0])
+        vc = cache["v"].at[bidx, positions[:, 0]].set(v[:, 0])
+    kc = shard_act(kc, ("batch", "kv_seq", "kv_heads", None))
+    vc = shard_act(vc, ("batch", "kv_seq", "kv_heads", None))
+    o = grouped_attention(q, kc, vc, causal=False, kv_len=pos + 1,
+                          kv_chunk=kc.shape[1])
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    return x + out, {"k": kc, "v": vc}
+
+
+def attn_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
+    shape = (batch, cache_len, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# dense GLU FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(ctx: ParamCtx, cfg: ModelConfig) -> dict:
+    dm, dff = cfg.d_model, cfg.d_ff
+    return {
+        "norm": ctx.param("norm", (dm,), ("d_model",), init="zeros"),
+        "wi": ctx.param("wi", (dm, 2, dff), ("d_model_fsdp", None, "d_ff")),
+        "wo": ctx.param("wo", (dff, dm), ("d_ff", "d_model_fsdp")),
+    }
+
+
+def ffn_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    gu = jnp.einsum("bsd,dcf->bscf", h, p["wi"].astype(x.dtype))
+    gu = shard_act(gu, ("batch", "seq", None, "d_ff"))
+    a = act_fn(cfg.act)(gu[:, :, 0]) * gu[:, :, 1]
+    out = jnp.einsum("bsf,fd->bsd", a, p["wo"].astype(x.dtype))
+    return x + shard_act(out, ("batch", "seq", "d_model"))

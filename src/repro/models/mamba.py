@@ -1,0 +1,176 @@
+"""Mamba (selective SSM) block — for the Jamba hybrid architecture.
+
+Set REPRO_MAMBA_PREMAT=1 to restore the naive full-sequence [B,S,di,ds]
+discretization (the §Perf jamba-iteration-1 "before" variant for A/B
+roofline measurement).
+
+Faithful selective-scan semantics (S6): input-dependent dt/B/C, diagonal A,
+causal depthwise conv stem, gated output. Training/prefill uses a chunked
+scan: ``lax.scan`` over sequence chunks with an intra-chunk
+``associative_scan`` (parallel within chunk, O(S/chunk) sequential steps) —
+the TPU-friendly middle ground between a fully-materialized associative
+scan (O(S·d_inner·d_state) memory) and a per-token scan (serial). Decode is
+O(1) per token with (conv window, ssm state) carried in the cache.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamCtx, rms_norm
+from repro.dist.sharding import shard_act
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    di = cfg.mamba_expand * cfg.d_model
+    ds = cfg.mamba_d_state
+    dtr = max(1, math.ceil(cfg.d_model / 16))
+    return di, ds, dtr, cfg.mamba_conv
+
+
+def mamba_init(ctx: ParamCtx, cfg: ModelConfig) -> dict:
+    dm = cfg.d_model
+    di, ds, dtr, ck = _dims(cfg)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    # A_log is a deterministic constant, created outside ctx.param — register
+    # its logical axes explicitly so param_shardings can place it.
+    ctx.axes["/".join(ctx._path + ["A_log"])] = ("d_ff", None)
+    return {
+        "norm": ctx.param("norm", (dm,), ("d_model",), init="zeros"),
+        "in_proj": ctx.param("in_proj", (dm, 2, di), ("d_model_fsdp", None, "d_ff")),
+        "conv_w": ctx.param("conv_w", (ck, di), ("conv", "d_ff"), scale=1.0 / math.sqrt(ck)),
+        "conv_b": ctx.param("conv_b", (di,), ("d_ff",), init="zeros"),
+        "x_proj": ctx.param("x_proj", (di, dtr + 2 * ds), ("d_ff", None)),
+        "dt_proj": ctx.param("dt_proj", (dtr, di), (None, "d_ff"),
+                             scale=dtr ** -0.5),
+        "dt_bias": ctx.param("dt_bias", (di,), ("d_ff",), init="zeros"),
+        # A_log stored so A = -exp(A_log) stays negative
+        "A_log": jnp.log(a).astype(ctx.dtype),
+        "D": ctx.param("D", (di,), ("d_ff",), init="ones"),
+        "out_proj": ctx.param("out_proj", (di, dm), ("d_ff", "d_model_fsdp")),
+    }
+
+
+def _ssm_inputs(p: dict, cfg: ModelConfig, xconv: jax.Array):
+    """dt, B, C from the conv output. xconv: [B, S, di]."""
+    di, ds, dtr, _ = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", xconv, p["x_proj"].astype(xconv.dtype))
+    dt_r, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"].astype(xconv.dtype))
+        + p["dt_bias"].astype(xconv.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # [di, ds]
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)   # [B,S,di,ds]
+    dBx = (dt * xconv).astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[..., None, :]
+    return dA, dBx, Cm.astype(jnp.float32)
+
+
+def _causal_conv(p: dict, x: jax.Array, ck: int) -> jax.Array:
+    """Depthwise causal conv over [B, S, di] via shifted adds (k is tiny)."""
+    w = p["conv_w"].astype(x.dtype)
+    out = jnp.zeros_like(x)
+    for i in range(ck):
+        shift = ck - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i]
+    return jax.nn.silu(out + p["conv_b"].astype(x.dtype))
+
+
+def mamba_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
+              chunk: int = 256, return_state: bool = False):
+    """Chunked selective scan. The [·, di, ds] discretized tensors (dA, dBx)
+    are computed *inside* the chunk scan from the [·, di]-sized conv
+    activations — the full-sequence [B, S, di, ds] tensors never exist
+    (16×d_state memory reduction; §Perf jamba hillclimb, iteration 1)."""
+    B, S, dm = x.shape
+    di, ds, dtr, ck = _dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,dce->bsce", h, p["in_proj"].astype(x.dtype))
+    xin, z = xz[:, :, 0], xz[:, :, 1]
+    xin = shard_act(xin, ("batch", "seq", "d_ff"))
+    xconv = _causal_conv(p, xin, ck)
+
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n_chunks = S // chunk
+
+    premat = os.environ.get("REPRO_MAMBA_PREMAT") == "1"
+
+    def combine(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    # jax.checkpoint on the chunk body: without it the scan's backward saves
+    # every chunk's [chunk, B, di, ds] discretization + associative-scan
+    # internals (~170 GiB/device for jamba train) — with it, only the
+    # [B, di, ds] carry per chunk survives (§Perf jamba iteration 2).
+    @jax.checkpoint
+    def scan_chunk(hprev, xconv_c):
+        # xconv_c: [chunk, B, di] — discretize per chunk, in-scan
+        dA_c, dBx_c, C_c = _ssm_inputs(p, cfg, xconv_c.swapaxes(0, 1))
+        dA_c, dBx_c = dA_c.swapaxes(0, 1), dBx_c.swapaxes(0, 1)
+        C_c = C_c.swapaxes(0, 1)
+        # intra-chunk associative scan on (a, b): h_t = a_t h_{t-1} + b_t
+        aa, bb = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=0)
+        hs = aa * hprev[None] + bb                         # [chunk, B, di, ds]
+        y = (hs * C_c[:, :, None, :]).sum(-1)              # [chunk, B, di]
+        return hs[-1], y
+
+    def scan_chunk_premat(hprev, xs):
+        dA_c, dBx_c, C_c = xs
+        aa, bb = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=0)
+        hs = aa * hprev[None] + bb
+        return hs[-1], (hs * C_c[:, :, None, :]).sum(-1)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    if premat:  # "before" variant: [B,S,di,ds] tensors materialized up front
+        dA, dBx, Cm = _ssm_inputs(p, cfg, xconv)
+        dA_t = dA.swapaxes(0, 1).reshape(n_chunks, chunk, B, di, ds)
+        dBx_t = dBx.swapaxes(0, 1).reshape(n_chunks, chunk, B, di, ds)
+        C_t = Cm.swapaxes(0, 1).reshape(n_chunks, chunk, B, ds)
+        h_last, ys = jax.lax.scan(scan_chunk_premat, h0, (dA_t, dBx_t, C_t))
+    else:
+        xconv_t = xconv.swapaxes(0, 1).reshape(n_chunks, chunk, B, di)
+        h_last, ys = jax.lax.scan(scan_chunk, h0, xconv_t)
+    y = ys.reshape(S, B, di).swapaxes(0, 1)                # [B, S, di]
+    y = y.astype(x.dtype) + xconv * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x.dtype))
+    out = x + shard_act(out, ("batch", "seq", "d_model"))
+    if return_state:
+        return out, {"conv": xin[:, S - (ck - 1):], "ssm": h_last}
+    return out
+
+
+def mamba_prefill(p: dict, cfg: ModelConfig, x: jax.Array):
+    return mamba_fwd(p, cfg, x, return_state=True)
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, ds, _, ck = _dims(cfg)
+    return {"conv": jnp.zeros((batch, ck - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, ds), jnp.float32)}
+
+
+def mamba_step(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+               pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """Decode one token: O(1) state update. x: [B, 1, dm]."""
+    B = x.shape[0]
+    di, ds, dtr, ck = _dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,dce->bsce", h, p["in_proj"].astype(x.dtype))
+    xin, z = xz[:, 0, 0], xz[:, 0, 1]                      # [B, di]
+    window = jnp.concatenate([cache["conv"], xin[:, None]], axis=1)  # [B, ck, di]
+    w = p["conv_w"].astype(x.dtype)
+    xconv = jax.nn.silu((window * w[None]).sum(1) + p["conv_b"].astype(x.dtype))
+    dA, dBx, Cm = _ssm_inputs(p, cfg, xconv[:, None])
+    hnew = dA[:, 0] * cache["ssm"] + dBx[:, 0]             # [B, di, ds]
+    y = (hnew * Cm[:, 0, None, :]).sum(-1).astype(x.dtype)
+    y = y + xconv * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", y, p["out_proj"].astype(x.dtype))
+    return x + out[:, None], {"conv": window[:, 1:], "ssm": hnew}

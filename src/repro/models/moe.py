@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Top-k routing with capacity-based scatter dispatch (GShard-style semantics,
+scatter implementation): tokens are placed into a per-expert slot buffer
+[E, C, d] — position within the expert computed by a rank-over-one-hot
+cumsum — expert GLU GEMMs run as one batched einsum over the expert dim
+(sharded over the ``model`` axis ⇒ XLA SPMD emits the all-to-all pair), and
+results gather back weighted by router probabilities. Tokens overflowing an
+expert's capacity are dropped (standard GShard behaviour; capacity_factor
+controls the slack).
+
+The rank-computation is the same sort/segment machinery as the core
+engine's weight-stationary compaction — see DESIGN.md §4 (qwen3 row).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamCtx, act_fn, rms_norm
+from repro.dist.sharding import shard_act
+
+
+def moe_init(ctx: ParamCtx, cfg: ModelConfig) -> dict:
+    dm, dff, E = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    p = {
+        "norm": ctx.param("norm", (dm,), ("d_model",), init="zeros"),
+        "router": ctx.param("router", (dm, E), ("d_model", None), scale=0.02),
+        "wi": ctx.param("wi", (E, dm, 2, dff),
+                        ("experts", "d_model_fsdp", None, "expert_ff")),
+        "wo": ctx.param("wo", (E, dff, dm),
+                        ("experts", "expert_ff", "d_model_fsdp")),
+    }
+    if cfg.n_shared_experts:
+        sdff = dff * cfg.n_shared_experts
+        p["swi"] = ctx.param("swi", (dm, 2, sdff), ("d_model_fsdp", None, "d_ff"))
+        p["swo"] = ctx.param("swo", (sdff, dm), ("d_ff", "d_model_fsdp"))
+    return p
+
+
+def capacity_for(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, dm = x.shape
+    E, k, dff = cfg.n_experts, cfg.top_k, cfg.d_ff_expert
+    N = B * S
+    C = capacity_for(cfg, N)
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps).reshape(N, dm)
+    logits = jnp.einsum("nd,de->ne", h.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                  # [N, k]
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # rank of each (token, choice) within its expert: cumsum over one-hot
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)     # [N, k, E]
+    flat = onehot.reshape(N * k, E)
+    rank = (jnp.cumsum(flat, axis=0) - flat).reshape(N, k, E)
+    pos = (rank * onehot).sum(-1)                         # [N, k] position in expert
+    keep = pos < C
+
+    # dispatch: scatter TOKEN IDS (int32) into the slot table, then gather
+    # embeddings — never materializes the k-times-repeated [N·k, dm] tensor
+    # the naive scatter-of-values formulation pays (§Perf MoE iteration)
+    dest = jnp.where(keep, eidx * C + pos, E * C)         # overflow -> dropped
+    tok_of = jnp.arange(N, dtype=jnp.int32)[:, None].repeat(k, axis=1)
+    slot_tok = jnp.full((E * C,), N, jnp.int32).at[dest.reshape(-1)].set(
+        tok_of.reshape(-1), mode="drop")
+    buf = jnp.where((slot_tok < N)[:, None],
+                    h.astype(x.dtype)[jnp.clip(slot_tok, 0, N - 1)], 0)
+    buf = shard_act(buf.reshape(E, C, dm), ("experts", "expert_cap", None))
+
+    # batched expert GLU — EP mode shards the expert dim; capacity-shard
+    # mode (small E, see dist rules) shards C instead so the [E,C,dff]
+    # working set never replicates across the model axis.
+    gu = jnp.einsum("ecd,edgf->ecgf", buf, p["wi"].astype(x.dtype))
+    gu = shard_act(gu, ("experts", "expert_cap", None, "expert_ff"))
+    a = act_fn(cfg.act)(gu[:, :, 0]) * gu[:, :, 1]
+    out_buf = jnp.einsum("ecf,efd->ecd", a, p["wo"].astype(x.dtype))
+    out_buf = shard_act(out_buf, ("experts", "expert_cap", None)).reshape(E * C, dm)
+
+    # gather back, weight by gates
+    gathered = out_buf[jnp.clip(dest, 0, E * C - 1)]      # [N, k, dm]
+    gathered = gathered * (keep & True)[..., None] * gate[..., None]
+    out = gathered.sum(axis=1)
+
+    if cfg.n_shared_experts:
+        sgu = jnp.einsum("nd,dgf->ngf", h.astype(x.dtype), p["swi"].astype(x.dtype))
+        out = out + jnp.einsum(
+            "nf,fd->nd", act_fn(cfg.act)(sgu[:, 0]) * sgu[:, 1],
+            p["swo"].astype(x.dtype))
+
+    return x + shard_act(out.reshape(B, S, dm), ("batch", "seq", "d_model"))
+
+
+def aux_load_balance_loss(logits: jax.Array, eidx: jax.Array, E: int) -> jax.Array:
+    """Switch-style auxiliary loss (optional; wired by the training loop)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = probs.mean(0)
+    ce = jax.nn.one_hot(eidx[:, 0], E).mean(0)
+    return E * jnp.sum(me * ce)

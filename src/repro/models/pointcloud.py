@@ -1,0 +1,195 @@
+"""The paper's evaluation networks on the Spira engine:
+
+* SparseResNet-21 (ResN)      — 21 SpC layers, K=3 backbone
+* MinkUNet-42 (UNet)          — 42 layers, encoder/decoder with inverse convs
+* CenterPoint-Large (ResNL)   — ResNet backbone with K=5 submanifold stages
+
+All voxel indexing (coord sets + kernel maps for every layer) happens once,
+up front, via ``core.build_network_plan`` — the network-wide indexing of
+Spira §5.5 — then the feature pass consumes the plan's kernel maps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (KernelMap, SpConvSpec, apply_spconv, init_spconv,
+                        build_network_plan)
+from repro.core.packing import BitLayout
+
+
+@dataclasses.dataclass(frozen=True)
+class PointCloudNet:
+    name: str
+    specs: Tuple[SpConvSpec, ...]
+    in_channels: int
+    n_classes: int
+
+    def conv_specs(self) -> Tuple[SpConvSpec, ...]:
+        return self.specs
+
+
+def _res_stage(name: str, c_in: int, c_out: int, m: int, n_blocks: int,
+               K: int = 3, dataflow: str = "os", t: int = 0) -> List[SpConvSpec]:
+    """Downsample conv (except stage 0) + n_blocks residual submanifold pairs."""
+    specs: List[SpConvSpec] = []
+    if m > 0:
+        specs.append(SpConvSpec(f"{name}_down", c_in, c_out, K=3,
+                                m_in=m - 1, m_out=m, dataflow=dataflow))
+        c_in = c_out
+    for b in range(n_blocks):
+        specs.append(SpConvSpec(f"{name}_b{b}a", c_in, c_out, K=K, m_in=m,
+                                m_out=m, dataflow=dataflow, t=t))
+        specs.append(SpConvSpec(f"{name}_b{b}b", c_out, c_out, K=K, m_in=m,
+                                m_out=m, dataflow=dataflow, t=t))
+        c_in = c_out
+    return specs
+
+
+def sparse_resnet21(in_channels: int = 4, n_classes: int = 20,
+                    width: Sequence[int] = (16, 32, 64, 128),
+                    dataflow: str = "os") -> PointCloudNet:
+    """21 SpC layers: stem + 4 stages × (down + 2 res-pairs)... matching the
+    paper's ResN layer count."""
+    specs: List[SpConvSpec] = [
+        SpConvSpec("stem", in_channels, width[0], K=3, m_in=0, m_out=0,
+                   dataflow=dataflow)]
+    c = width[0]
+    for s, w in enumerate(width):
+        n_blocks = 1 if s < 2 else 1
+        specs += _res_stage(f"s{s}", c, w, m=s, n_blocks=n_blocks,
+                            dataflow=dataflow)
+        c = w
+    # head convs to reach 21
+    while len(specs) < 21:
+        specs.append(SpConvSpec(f"head{len(specs)}", c, c, K=3,
+                                m_in=len(width) - 1, m_out=len(width) - 1,
+                                dataflow=dataflow))
+    return PointCloudNet("sparse_resnet21", tuple(specs), in_channels, n_classes)
+
+
+def minkunet42(in_channels: int = 4, n_classes: int = 20,
+               width: Sequence[int] = (32, 64, 128, 256),
+               dataflow: str = "os") -> PointCloudNet:
+    # NB: the paper finds UNet favors weight-stationary **on GPU**; on TPU
+    # (no atomics — WS merges via scatter) output-stationary wins by ~1000×
+    # collective/memory terms in the pod-scale dry-run (§Perf SpC iter-1),
+    # so "os" is the TPU default. Pass dataflow="ws" to reproduce the GPU
+    # preference structurally.
+    """Encoder (4 downsample stages) + decoder (4 inverse-conv stages) with
+    submanifold pairs at each level — 42 SpC layers total."""
+    specs: List[SpConvSpec] = [
+        SpConvSpec("stem0", in_channels, width[0], K=3, m_in=0, m_out=0,
+                   dataflow=dataflow),
+        SpConvSpec("stem1", width[0], width[0], K=3, m_in=0, m_out=0,
+                   dataflow=dataflow)]
+    c = width[0]
+    for s, w in enumerate(width):  # encoder: 4 × (down + 2 sub) = 12
+        specs.append(SpConvSpec(f"enc{s}_down", c, w, K=3, m_in=s, m_out=s + 1,
+                                dataflow=dataflow))
+        specs.append(SpConvSpec(f"enc{s}_a", w, w, K=3, m_in=s + 1, m_out=s + 1,
+                                dataflow=dataflow))
+        specs.append(SpConvSpec(f"enc{s}_b", w, w, K=3, m_in=s + 1, m_out=s + 1,
+                                dataflow=dataflow))
+        c = w
+    dec_width = (128, 96, 96, 96)
+    for s in range(4):             # decoder: 4 × (up + skip-merge sub ×2)
+        lvl = 4 - s - 1
+        w = dec_width[s]
+        specs.append(SpConvSpec(f"dec{s}_up", c, w, K=3, m_in=lvl + 1,
+                                m_out=lvl, dataflow=dataflow))
+        skip_c = width[lvl - 1] if lvl > 0 else width[0]
+        specs.append(SpConvSpec(f"dec{s}_a", w + skip_c, w, K=3, m_in=lvl,
+                                m_out=lvl, dataflow=dataflow))
+        specs.append(SpConvSpec(f"dec{s}_b", w, w, K=3, m_in=lvl, m_out=lvl,
+                                dataflow=dataflow))
+        c = w
+    # extra submanifold pairs to reach 42 layers (paper count)
+    i = 0
+    while len(specs) < 42:
+        specs.append(SpConvSpec(f"tail{i}", c, c, K=3, m_in=0, m_out=0,
+                                dataflow=dataflow))
+        i += 1
+    return PointCloudNet("minkunet42", tuple(specs), in_channels, n_classes)
+
+
+def centerpoint_large(in_channels: int = 5, n_classes: int = 10,
+                      width: Sequence[int] = (16, 32, 32, 64),
+                      dataflow: str = "hybrid", t: int = 3) -> PointCloudNet:
+    """CenterPoint-Large (ResNL): K=5 submanifold layers in all stages."""
+    specs: List[SpConvSpec] = [
+        SpConvSpec("stem", in_channels, width[0], K=5, m_in=0, m_out=0,
+                   dataflow=dataflow, t=t)]
+    c = width[0]
+    for s, w in enumerate(width):
+        specs += _res_stage(f"s{s}", c, w, m=s, n_blocks=1, K=5,
+                            dataflow=dataflow, t=t)
+        c = w
+    while len(specs) < 20:
+        specs.append(SpConvSpec(f"head{len(specs)}", c, c, K=5, m_in=3,
+                                m_out=3, dataflow=dataflow, t=t))
+    return PointCloudNet("centerpoint_large", tuple(specs), in_channels,
+                         n_classes)
+
+
+NETWORKS = {
+    "sparse_resnet21": sparse_resnet21,
+    "minkunet42": minkunet42,
+    "centerpoint_large": centerpoint_large,
+}
+
+
+# ---------------------------------------------------------------------------
+# parameters + feature pass
+# ---------------------------------------------------------------------------
+
+def init_pointcloud(key: jax.Array, net: PointCloudNet, dtype=jnp.float32) -> dict:
+    params = {}
+    keys = jax.random.split(key, len(net.specs) + 1)
+    for k, spec in zip(keys, net.specs):
+        params[spec.name] = init_spconv(k, spec, dtype)
+    params["head"] = (jax.random.normal(keys[-1],
+                                        (net.specs[-1].cout, net.n_classes),
+                                        dtype) * 0.02)
+    return params
+
+
+def _relu_bn(x: jax.Array, count: jax.Array) -> jax.Array:
+    """ReLU + masked feature standardization (BN stand-in that respects the
+    valid-row prefix)."""
+    mask = (jnp.arange(x.shape[0]) < count)[:, None]
+    x = jax.nn.relu(x)
+    denom = jnp.maximum(count.astype(x.dtype), 1.0)
+    mean = jnp.sum(jnp.where(mask, x, 0), 0) / denom
+    var = jnp.sum(jnp.where(mask, (x - mean) ** 2, 0), 0) / denom
+    return jnp.where(mask, (x - mean) * jax.lax.rsqrt(var + 1e-5), 0)
+
+
+def pointcloud_forward(params: dict, net: PointCloudNet, plan,
+                       features: jax.Array) -> jax.Array:
+    """Run the feature-computation pass over a precomputed NetworkPlan.
+
+    Handles UNet skip connections by stashing encoder outputs per level and
+    concatenating at ``dec*_a`` layers (channel concat on the fine coords).
+    """
+    skips: Dict[int, jax.Array] = {}
+    x = features
+    level = 0
+    for spec in net.specs:
+        kmap = plan.kmaps[spec.name]
+        if spec.name.startswith("dec") and spec.name.endswith("_a"):
+            skip = skips.get(spec.m_in)
+            if skip is not None:
+                x = jnp.concatenate([x, skip], axis=-1)
+        x = apply_spconv(params[spec.name], spec, x, kmap)
+        x = _relu_bn(x, kmap.out_count)
+        if spec.name.startswith("enc") and spec.name.endswith("_b"):
+            skips[spec.m_out] = x
+        if spec.name.startswith("stem"):
+            skips[0] = x
+        level = spec.m_out
+    return x @ params["head"].astype(x.dtype)

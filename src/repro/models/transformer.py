@@ -1,0 +1,273 @@
+"""Model assembly: scan-over-superblocks decoder LM.
+
+Depth is expressed as ``lax.scan`` over stacked per-layer parameters (one
+HLO body per *distinct* SuperBlock), so compile time — which the 512-device
+dry-run pays dearly for — is independent of layer count. Heterogeneous
+stacks (Jamba's 1-attention:7-mamba interleave, xLSTM's 7-mLSTM:1-sLSTM)
+become SuperBlocks whose inner sub-layers are unrolled inside the scanned
+body.
+
+All entry points:
+  forward(...)        full-sequence logits (training / evaluation)
+  loss_fn(...)        mean token cross-entropy (masked labels < 0)
+  init_decode_state   static-size per-layer caches
+  decode_step(...)    one-token serve step (lowered for decode_* shapes)
+  prefill(...)        populate caches from a prompt
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamCtx, SuperBlock, cross_entropy, rms_norm
+from . import layers, mamba, moe, xlstm
+from repro.dist.sharding import shard_act
+
+BLOCK_INIT = {"attn": layers.attn_init, "mamba": mamba.mamba_init,
+              "mlstm": xlstm.mlstm_init, "slstm": xlstm.slstm_init}
+BLOCK_STEP = {"attn": layers.attn_step, "mamba": mamba.mamba_step,
+              "mlstm": xlstm.mlstm_step, "slstm": xlstm.slstm_step}
+
+
+def _block_fwd(kind: str, p, cfg, x, positions):
+    if kind == "attn":
+        return layers.attn_fwd(p, cfg, x, positions)
+    if kind == "mamba":
+        return mamba.mamba_fwd(p, cfg, x)
+    if kind == "mlstm":
+        return xlstm.mlstm_fwd(p, cfg, x)
+    if kind == "slstm":
+        return xlstm.slstm_fwd(p, cfg, x)
+    raise ValueError(kind)
+
+
+def _block_cache(kind: str, cfg, batch, cache_len, dtype):
+    if kind == "attn":
+        return layers.attn_init_cache(cfg, batch, cache_len, dtype)
+    if kind == "mamba":
+        return mamba.mamba_init_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.mlstm_init_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm.slstm_init_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _sb_init_one(cfg: ModelConfig, sb: SuperBlock, key: jax.Array,
+                 collect_axes: Optional[dict] = None, prefix: str = "") -> dict:
+    ctx = ParamCtx(key, cfg.param_dtype)
+    p: Dict[str, Any] = {}
+    for bi, (kind, ffn) in enumerate(sb.blocks):
+        # scope names mirror the dict keys exactly so the recorded logical-
+        # axes paths match tree_flatten_with_path (param_shardings asserts it)
+        with ctx.scope(f"b{bi}"):
+            p[f"b{bi}"] = BLOCK_INIT[kind](ctx, cfg)
+        with ctx.scope(f"f{bi}"):
+            if ffn == "dense":
+                p[f"f{bi}"] = layers.ffn_init(ctx, cfg)
+            elif ffn == "moe":
+                p[f"f{bi}"] = moe.moe_init(ctx, cfg)
+    if collect_axes is not None:
+        for path, ax in ctx.axes.items():
+            collect_axes[f"{prefix}/{path}"] = ("layers",) + tuple(ax)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tuple[dict, dict]:
+    """Returns (params, logical-axes table path → axes)."""
+    axes: Dict[str, Tuple] = {}
+    keys = jax.random.split(key, len(cfg.superblocks) + 2)
+    params: Dict[str, Any] = {}
+    ctx = ParamCtx(keys[-1], cfg.param_dtype)
+    if not cfg.embedding_inputs:
+        params["embed"] = ctx.param("embed", (cfg.vocab, cfg.d_model),
+                                    ("vocab", "d_model"), scale=0.02)
+        axes["embed"] = ("vocab", "d_model")
+    params["final_norm"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    axes["final_norm"] = ("d_model",)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ctx.param("lm_head", (cfg.d_model, cfg.vocab),
+                                      ("d_model", "vocab"))
+        axes["lm_head"] = ("d_model", "vocab")
+    for si, sb in enumerate(cfg.superblocks):
+        name = f"sb{si}"
+        # record axes from one instance, stack `repeat` instances via vmap
+        _sb_init_one(cfg, sb, keys[si], collect_axes=axes, prefix=name)
+        sub = jax.random.split(keys[si], sb.repeat)
+        params[name] = jax.vmap(lambda k, sb=sb: _sb_init_one(cfg, sb, k))(sub)
+    return params, axes
+
+
+def abstract_params(cfg: ModelConfig, key=None) -> Tuple[dict, dict]:
+    """ShapeDtypeStructs + axes, no allocation (dry-run path)."""
+    axes_box = {}
+
+    def go():
+        p, ax = init_params(cfg, jax.random.key(0))
+        axes_box["axes"] = ax
+        return p
+
+    shapes = jax.eval_shape(go)
+    return shapes, axes_box["axes"]
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """batch: {"tokens": [B,S]} and/or {"embeds": [B,Se,d]} (stub frontends).
+    When both present, embeds form the sequence prefix (VLM-style)."""
+    parts = []
+    if "embeds" in batch and batch["embeds"] is not None:
+        parts.append(batch["embeds"].astype(cfg.param_dtype))
+    if "tokens" in batch and batch["tokens"] is not None:
+        parts.append(params["embed"].astype(cfg.param_dtype)[batch["tokens"]])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return shard_act(x, ("batch", "seq", "d_model"))
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict,
+            remat: bool = False) -> jax.Array:
+    x = _embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    for si, sb in enumerate(cfg.superblocks):
+        def body(x, layer_params, sb=sb):
+            for bi, (kind, ffn) in enumerate(sb.blocks):
+                x = _block_fwd(kind, layer_params[f"b{bi}"], cfg, x, positions)
+                if ffn == "dense":
+                    x = layers.ffn_fwd(layer_params[f"f{bi}"], cfg, x)
+                elif ffn == "moe":
+                    x = moe.moe_fwd(layer_params[f"f{bi}"], cfg, x)
+            # sequence-parallel residual stream: the scan carry (= the
+            # activation remat saves per layer) is sharded over the model
+            # axis along seq — Megatron-SP; 16× less saved-activation HBM.
+            return shard_act(x, ("batch", "seq_sp", "d_model")), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params[f"sb{si}"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict,
+            remat: bool = False) -> jax.Array:
+    logits = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    if "embeds" in batch and batch["embeds"] is not None and "tokens" in batch \
+            and batch["tokens"] is not None:
+        # VLM: loss only over the token suffix
+        logits = logits[:, -labels.shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    state: Dict[str, Any] = {}
+    dt = cfg.param_dtype
+    for si, sb in enumerate(cfg.superblocks):
+        sbs = {}
+        for bi, (kind, _) in enumerate(sb.blocks):
+            one = _block_cache(kind, cfg, batch, cache_len, dt)
+            sbs[f"b{bi}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (sb.repeat, *a.shape)), one)
+        state[f"sb{si}"] = sbs
+    return state
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: dict, batch: dict,
+                pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """One token for the whole batch. batch: {"tokens": [B,1]} or embeds.
+    ``pos``: scalar count of already-cached tokens."""
+    x = _embed_inputs(params, cfg, batch)
+    new_state: Dict[str, Any] = {}
+    for si, sb in enumerate(cfg.superblocks):
+        def body(x, xs, sb=sb):
+            layer_params, layer_state = xs
+            out_state = {}
+            for bi, (kind, ffn) in enumerate(sb.blocks):
+                x, st = BLOCK_STEP[kind](layer_params[f"b{bi}"], cfg, x,
+                                         layer_state[f"b{bi}"], pos)
+                out_state[f"b{bi}"] = st
+                if ffn == "dense":
+                    x = layers.ffn_fwd(layer_params[f"f{bi}"], cfg, x)
+                elif ffn == "moe":
+                    x = moe.moe_fwd(layer_params[f"f{bi}"], cfg, x)
+            return x, out_state
+
+        x, ns = jax.lax.scan(body, x, (params[f"sb{si}"], state[f"sb{si}"]))
+        new_state[f"sb{si}"] = ns
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return logits, new_state
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache_len: int
+            ) -> Tuple[jax.Array, dict]:
+    """Run the prompt through the model, returning (logits, decode state).
+
+    Implemented as forward-with-state-capture per block (each block module
+    provides its own prefill that returns the final recurrent state / KV).
+    """
+    x = _embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    state: Dict[str, Any] = {}
+    for si, sb in enumerate(cfg.superblocks):
+        def body(x, layer_params, sb=sb):
+            sts = {}
+            for bi, (kind, ffn) in enumerate(sb.blocks):
+                p = layer_params[f"b{bi}"]
+                if kind == "attn":
+                    x, st = layers.attn_prefill(p, cfg, x, positions, cache_len)
+                else:
+                    # recurrent blocks: run fwd then recompute the final state
+                    # cheaply by stepping the last token is wrong; instead each
+                    # module's fwd exposes the carry — handled via its
+                    # *_prefill below.
+                    x, st = _recurrent_prefill(kind, p, cfg, x)
+                sts[f"b{bi}"] = st
+                if ffn == "dense":
+                    x = layers.ffn_fwd(layer_params[f"f{bi}"], cfg, x)
+                elif ffn == "moe":
+                    x = moe.moe_fwd(layer_params[f"f{bi}"], cfg, x)
+            return x, sts
+
+        x, st = jax.lax.scan(body, x, params[f"sb{si}"])
+        state[f"sb{si}"] = st
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], head.astype(x.dtype))
+    return logits, state
+
+
+def _recurrent_prefill(kind: str, p, cfg, x):
+    if kind == "mamba":
+        return mamba.mamba_prefill(p, cfg, x)
+    if kind == "mlstm":
+        return xlstm.mlstm_prefill(p, cfg, x)
+    if kind == "slstm":
+        return xlstm.slstm_prefill(p, cfg, x)
+    raise ValueError(kind)

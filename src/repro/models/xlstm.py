@@ -1,0 +1,248 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) with stabilized exponential gating.
+
+mLSTM training/prefill uses the *chunkwise-parallel* form (quadratic only
+within a chunk, recurrent across chunks) — O(S·chunk) instead of O(S²) and
+O(1)-state decode. sLSTM is inherently sequential (recurrent gate inputs):
+``lax.scan`` over time, O(1)-state decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamCtx, rms_norm
+from repro.dist.sharding import shard_act
+
+
+def _mdims(cfg: ModelConfig) -> Tuple[int, int]:
+    di = int(cfg.lstm_proj_factor * cfg.d_model)
+    dh = di // cfg.n_heads
+    return di, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(ctx: ParamCtx, cfg: ModelConfig) -> dict:
+    dm = cfg.d_model
+    di, dh = _mdims(cfg)
+    H = cfg.n_heads
+    return {
+        "norm": ctx.param("norm", (dm,), ("d_model",), init="zeros"),
+        "up": ctx.param("up", (dm, 2, di), ("d_model_fsdp", None, "d_ff")),
+        "wq": ctx.param("wq", (di, H, dh), ("d_ff", "heads", None)),
+        "wk": ctx.param("wk", (di, H, dh), ("d_ff", "heads", None)),
+        "wv": ctx.param("wv", (di, H, dh), ("d_ff", "heads", None)),
+        "wi": ctx.param("wi", (di, H), ("d_ff", "heads"), scale=0.02),
+        "bi": ctx.param("bi", (H,), ("heads",), init="zeros"),
+        "wf": ctx.param("wf", (di, H), ("d_ff", "heads"), scale=0.02),
+        "bf": ctx.param("bf", (H,), ("heads",), init="ones"),
+        "og": ctx.param("og", (di, di), ("d_ff", "d_ff")),
+        "down": ctx.param("down", (di, dm), ("d_ff", "d_model_fsdp")),
+    }
+
+
+def _mlstm_qkvgates(p: dict, cfg: ModelConfig, xin: jax.Array):
+    H = cfg.n_heads
+    q = jnp.einsum("bsd,dhe->bshe", xin, p["wq"].astype(xin.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", xin, p["wk"].astype(xin.dtype)) / math.sqrt(q.shape[-1])
+    v = jnp.einsum("bsd,dhe->bshe", xin, p["wv"].astype(xin.dtype))
+    igate = (jnp.einsum("bsd,dh->bsh", xin, p["wi"].astype(xin.dtype))
+             + p["bi"].astype(xin.dtype)).astype(jnp.float32)
+    fgate = (jnp.einsum("bsd,dh->bsh", xin, p["wf"].astype(xin.dtype))
+             + p["bf"].astype(xin.dtype)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fgate)                      # stabilized log f
+    return q, k, v, igate, logf
+
+
+def mlstm_fwd(p: dict, cfg: ModelConfig, x: jax.Array, chunk: int = 256,
+              return_state: bool = False):
+    """Chunkwise-parallel mLSTM. x: [B, S, dm]."""
+    B, S, dm = x.shape
+    di, dh = _mdims(cfg)
+    H = cfg.n_heads
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    ug = jnp.einsum("bsd,dce->bsce", h, p["up"].astype(x.dtype))
+    xin, z = ug[:, :, 0], ug[:, :, 1]
+    xin = shard_act(xin, ("batch", "seq", "d_ff"))
+    q, k, v, igate, logf = _mlstm_qkvgates(p, cfg, xin)
+
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    # time-major chunking: [n, chunk, B, H, ...]
+    cm = lambda t: t.swapaxes(0, 1).reshape(n, chunk, *t.shape[0:1], *t.shape[2:])
+    qc, kc, vc = cm(q), cm(k), cm(v)
+    ic, fc = cm(igate), cm(logf)
+
+    def scan_chunk(carry, xs):
+        C, nrm, m = carry          # [B,H,dh,dh], [B,H,dh], [B,H]
+        qb, kb, vb, ib, fb = xs    # [chunk,B,H,...]
+        fcum = jnp.cumsum(fb, axis=0)                       # Σ log f within chunk
+        ftot = fcum[-1]
+        # log decay of initial state at position t: fcum[t]
+        # log weight of source s onto target t (s <= t): fcum[t]-fcum[s]+i[s]
+        lw_state = fcum + m[None]                           # [chunk,B,H]
+        lw_src = ib - fcum                                  # source log-weight base
+        # target-t max over sources s<=t  =  cummax(i_s - fcum_s) + fcum_t
+        m_src = jax.lax.cummax(lw_src, axis=0) + fcum       # [chunk,B,H]
+        m_new_t = jnp.maximum(lw_state, m_src)              # running max per t
+        # scores: s<=t matrix in log space
+        lsm = lw_src[None, :] + fcum[:, None]               # [t, s, B, H]
+        tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(tril[:, :, None, None], jnp.exp(lsm - m_new_t[:, None]), 0.0)
+        qs = qb.astype(jnp.float32)
+        att = jnp.einsum("tbhd,sbhd->tsbh", qs, kb.astype(jnp.float32))
+        num_intra = jnp.einsum("tsbh,sbhe->tbhe", w * att, vb.astype(jnp.float32))
+        den_intra = jnp.einsum("tsbh,sbhd->tbhd", w, kb.astype(jnp.float32))
+        den_intra = jnp.einsum("tbhd,tbhd->tbh", qs, den_intra)
+        # inter-chunk (state) contribution, decayed by exp(lw_state - m_new)
+        dec = jnp.exp(lw_state - m_new_t)                   # [chunk,B,H]
+        num_state = jnp.einsum("tbhd,bhde->tbhe", qs, C) * dec[..., None]
+        den_state = jnp.einsum("tbhd,bhd->tbh", qs, nrm) * dec
+        num = num_intra + num_state
+        den = den_intra + den_state
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new_t))[..., None]
+        # chunk-end state update
+        m_end = jnp.maximum(ftot + m, jnp.max(lw_src + ftot, axis=0))
+        wsrc = jnp.exp(lw_src + ftot - m_end[None])         # [chunk,B,H]
+        C_new = jnp.exp(ftot + m - m_end)[..., None, None] * C + jnp.einsum(
+            "sbh,sbhd,sbhe->bhde", wsrc, kb.astype(jnp.float32), vb.astype(jnp.float32))
+        n_new = jnp.exp(ftot + m - m_end)[..., None] * nrm + jnp.einsum(
+            "sbh,sbhd->bhd", wsrc, kb.astype(jnp.float32))
+        return (C_new, n_new, m_end), hout
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (C_f, n_f, m_f), hs = jax.lax.scan(scan_chunk, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    hseq = hs.reshape(S, B, H, dh).swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    hseq = hseq * jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xin, p["og"].astype(x.dtype)))
+    hseq = hseq * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", hseq, p["down"].astype(x.dtype))
+    out = x + shard_act(out, ("batch", "seq", "d_model"))
+    if return_state:
+        return out, {"C": C_f, "n": n_f, "m": m_f}
+    return out
+
+
+def mlstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array):
+    return mlstm_fwd(p, cfg, x, return_state=True)
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, dh = _mdims(cfg)
+    H = cfg.n_heads
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def mlstm_step(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+               pos: jax.Array) -> Tuple[jax.Array, dict]:
+    B = x.shape[0]
+    di, dh = _mdims(cfg)
+    H = cfg.n_heads
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    ug = jnp.einsum("bsd,dce->bsce", h, p["up"].astype(x.dtype))
+    xin, z = ug[:, 0, 0], ug[:, 0, 1]                      # [B, di]
+    q, k, v, igate, logf = _mlstm_qkvgates(p, cfg, xin[:, None])
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                    # [B,H,dh]
+    i0, f0 = igate[:, 0], logf[:, 0]                       # [B,H]
+    C, nrm, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(f0 + m, i0)
+    a = jnp.exp(f0 + m - m_new)[..., None]
+    b = jnp.exp(i0 - m_new)[..., None]
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C_new = a[..., None] * C + b[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_new = a * nrm + b * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.einsum("bhd,bhd->bh", qf, n_new)
+    hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    hvec = hout.reshape(B, di).astype(x.dtype)
+    hvec = hvec * jax.nn.sigmoid(jnp.einsum("bd,de->be", xin, p["og"].astype(x.dtype)))
+    hvec = hvec * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", hvec, p["down"].astype(x.dtype))
+    return x + out[:, None], {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(ctx: ParamCtx, cfg: ModelConfig) -> dict:
+    dm = cfg.d_model
+    return {
+        "norm": ctx.param("norm", (dm,), ("d_model",), init="zeros"),
+        "wx": ctx.param("wx", (dm, 4, dm), ("d_model_fsdp", None, "d_ff")),
+        "wr": ctx.param("wr", (dm, 4, dm), ("d_ff", None, "d_ff"), scale=0.02),
+        "b": ctx.param("b", (4, dm), (None, "d_ff"), init="zeros"),
+        "down": ctx.param("down", (dm, dm), ("d_ff", "d_model_fsdp")),
+    }
+
+
+def _slstm_cell(p, cfg, xt, state):
+    """One sLSTM step. xt: [B, 4, dm] (precomputed Wx x_t)."""
+    c, n, hprev, m = state
+    g = xt + jnp.einsum("bd,dce->bce", hprev, p["wr"].astype(hprev.dtype)) \
+        + p["b"].astype(hprev.dtype)
+    i, f, zg, o = (g[:, j].astype(jnp.float32) for j in range(4))
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f) + m, i)
+    ie = jnp.exp(i - m_new)
+    fe = jnp.exp(jax.nn.log_sigmoid(f) + m - m_new)
+    c_new = fe * c + ie * jnp.tanh(zg)
+    n_new = fe * n + ie
+    h_new = (jax.nn.sigmoid(o.astype(jnp.float32)) * c_new
+             / jnp.maximum(n_new, 1e-6)).astype(hprev.dtype)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
+              return_state: bool = False):
+    B, S, dm = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xg = jnp.einsum("bsd,dce->bsce", h, p["wx"].astype(x.dtype))  # [B,S,4,dm]
+
+    def step(state, xt):
+        return _slstm_cell(p, cfg, xt, state)
+
+    c0 = jnp.zeros((B, dm), jnp.float32)
+    h0 = jnp.zeros((B, dm), x.dtype)
+    m0 = jnp.full((B, dm), -1e30, jnp.float32)
+    (c_f, n_f, h_f, m_f), hs = jax.lax.scan(step, (c0, c0, h0, m0),
+                                            xg.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1)                                  # [B,S,dm]
+    out = jnp.einsum("bsd,de->bse", hs, p["down"].astype(x.dtype))
+    out = x + shard_act(out, ("batch", "seq", "d_model"))
+    if return_state:
+        return out, {"c": c_f, "n": n_f, "h": h_f, "m": m_f}
+    return out
+
+
+def slstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array):
+    return slstm_fwd(p, cfg, x, return_state=True)
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    dm = cfg.d_model
+    return {"c": jnp.zeros((batch, dm), jnp.float32),
+            "n": jnp.zeros((batch, dm), jnp.float32),
+            "h": jnp.zeros((batch, dm), dtype),
+            "m": jnp.full((batch, dm), -1e30, jnp.float32)}
+
+
+def slstm_step(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+               pos: jax.Array) -> Tuple[jax.Array, dict]:
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xg = jnp.einsum("bsd,dce->bsce", h, p["wx"].astype(x.dtype))[:, 0]
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, hn, m), hout = _slstm_cell(p, cfg, xg, state)
+    out = jnp.einsum("bd,de->be", hout, p["down"].astype(x.dtype))
+    return x + out[:, None], {"c": c, "n": n, "h": hn, "m": m}

@@ -1,0 +1,3 @@
+from .optimizer import AdamWConfig, OptState, init_opt_state, apply_updates
+from .loop import TrainConfig, make_train_step, train
+from . import compression

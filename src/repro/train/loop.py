@@ -1,0 +1,124 @@
+"""Training step + loop: remat, grad accumulation, compression, fault
+tolerance hooks.
+
+``make_train_step`` builds the jittable step (loss → grad → clip → AdamW);
+``train`` drives it with checkpointing, a preemption handler (SIGTERM forces
+a final checkpoint — the TPU-pod eviction pattern), and a per-step watchdog
+that records straggling steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig
+from .optimizer import AdamWConfig, OptState, apply_updates, init_opt_state
+from . import compression
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    remat: bool = True
+    grad_accum: int = 1
+    compress_grads: bool = False
+    log_every: int = 10
+    ckpt_every: int = 100
+    watchdog_factor: float = 3.0   # step > factor × median ⇒ straggler log
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Returns step(params, opt_state, batch[, residual]) → (params, opt_state,
+    metrics[, residual]). Microbatched via lax.scan when grad_accum > 1."""
+
+    def loss_of(p, b):
+        return tf.loss_fn(p, cfg, b, remat=tcfg.remat)
+
+    def step(params, opt_state: OptState, batch, residual=None):
+        if tcfg.grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, _ = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (jax.tree.map(jnp.add, acc, g), l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(tcfg.grad_accum, -1, *x.shape[1:]), batch)
+            (gsum, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, gsum)
+        if tcfg.compress_grads:
+            grads, residual = compression.compress_tree(grads, residual)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state,
+                                                   tcfg.opt)
+        metrics["loss"] = loss
+        if tcfg.compress_grads:
+            return params, opt_state, metrics, residual
+        return params, opt_state, metrics
+
+    return step
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT → request a final checkpoint and clean exit."""
+
+    def __init__(self):
+        self.requested = False
+        for sig in (signal.SIGTERM,):
+            try:
+                signal.signal(sig, self._handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _handler(self, *_):
+        self.requested = True
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, data: Iterator,
+          n_steps: int, params=None, opt_state=None, start_step: int = 0,
+          ckpt_manager=None, log: Optional[Callable] = print):
+    """Single-host driver (the multi-pod path wraps this with the mesh +
+    sharded init from launch/train.py)."""
+    if params is None:
+        params, _ = tf.init_params(cfg, jax.random.key(0))
+    if opt_state is None:
+        opt_state = init_opt_state(params, tcfg.opt)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    guard = PreemptionGuard()
+    residual = None
+    durations = []
+    metrics = {}
+    for step in range(start_step, n_steps):
+        batch = next(data)
+        t0 = time.perf_counter()
+        if tcfg.compress_grads:
+            params, opt_state, metrics, residual = step_fn(
+                params, opt_state, batch, residual)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        durations.append(dt)
+        med = sorted(durations)[len(durations) // 2]
+        if dt > tcfg.watchdog_factor * med and len(durations) > 5 and log:
+            log(f"[watchdog] step {step} took {dt:.2f}s (median {med:.2f}s) — "
+                "straggling host or input stall")
+        if log and step % tcfg.log_every == 0:
+            log(f"step {step} loss {float(metrics['loss']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+        if ckpt_manager is not None and (
+                step % tcfg.ckpt_every == 0 or guard.requested
+                or step == n_steps - 1):
+            ckpt_manager.save(step, params, opt_state)
+        if guard.requested:
+            if log:
+                log(f"[preempt] checkpointed at step {step}, exiting")
+            break
+    return params, opt_state, metrics

@@ -1,0 +1,201 @@
+"""Core engine correctness: packing, coord sets, z-delta search, dataflows."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import packing
+from repro.core.packing import BitLayout, pack, pack_offsets, unpack, offset_grid
+from repro.core.voxel import build_coord_set, downsample, pad_value
+from repro.core.zdelta import zdelta_offsets, zdelta_search, simple_bsearch
+from repro.core import hashmap
+from repro.core.kernel_map import KernelMap, density_by_l1, l1_norm_max
+from repro.core.dataflow import output_stationary, weight_stationary, hybrid
+from repro.core import reference
+from repro.data import scenes
+
+
+def make_coord_set(coords: np.ndarray, layout: BitLayout, capacity=None):
+    p = np.asarray(pack(jnp.asarray(coords), layout))
+    cap = capacity or len(p)
+    buf = np.full((cap,), pad_value(p.dtype), p.dtype)
+    buf[: len(p)] = p
+    return build_coord_set(jnp.asarray(buf))
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+def test_pack_roundtrip_and_order():
+    rng = np.random.default_rng(0)
+    layout = BitLayout.for_extent(500, 400, 100, guard=16)
+    c = rng.integers(16, 100, (512, 3)).astype(np.int32)
+    p = pack(jnp.asarray(c), layout)
+    back, b = unpack(p, layout)
+    np.testing.assert_array_equal(np.asarray(back), c)
+    # lexicographic order preserved
+    order_np = np.lexsort((c[:, 2], c[:, 1], c[:, 0]))
+    order_packed = np.argsort(np.asarray(p), kind="stable")
+    np.testing.assert_array_equal(
+        c[order_np], np.asarray(back)[order_packed])
+
+
+def test_pack_offset_additivity():
+    layout = BitLayout.for_extent(500, 400, 100, guard=16)
+    rng = np.random.default_rng(1)
+    q = rng.integers(20, 90, (256, 3)).astype(np.int32)
+    d = rng.integers(-8, 9, (256, 3)).astype(np.int32)
+    lhs = pack(jnp.asarray(q), layout) + pack_offsets(jnp.asarray(d), layout)
+    rhs = pack(jnp.asarray(q + d), layout)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+def test_downsample_mask_rounding():
+    layout = BitLayout.for_extent(500, 400, 100, guard=16)
+    rng = np.random.default_rng(2)
+    c = rng.integers(16, 100, (128, 3)).astype(np.int32)
+    for m in (1, 2, 3):
+        got, _ = unpack(packing.round_down(pack(jnp.asarray(c), layout), layout, m), layout)
+        np.testing.assert_array_equal(np.asarray(got), (c >> m) << m)
+
+
+def test_batch_field_pack():
+    layout = BitLayout.for_extent(100, 100, 50, batch=8, guard=16)
+    rng = np.random.default_rng(3)
+    c = rng.integers(16, 60, (64, 3)).astype(np.int32)
+    b = rng.integers(0, 8, (64,)).astype(np.int32)
+    p = pack(jnp.asarray(c), layout, batch=jnp.asarray(b))
+    back, bb = unpack(p, layout)
+    np.testing.assert_array_equal(np.asarray(back), c)
+    np.testing.assert_array_equal(np.asarray(bb), b)
+
+
+# ---------------------------------------------------------------------------
+# coord set / downsample
+# ---------------------------------------------------------------------------
+
+def test_build_coord_set_sort_dedup():
+    layout = BitLayout.for_extent(200, 200, 60, guard=16)
+    rng = np.random.default_rng(4)
+    c = rng.integers(16, 80, (400, 3)).astype(np.int32)
+    c = np.concatenate([c, c[:100]])  # duplicates
+    cs = make_coord_set(c, layout, capacity=600)
+    uniq = np.unique(np.asarray(pack(jnp.asarray(c), layout)))
+    assert int(cs.count) == len(uniq)
+    np.testing.assert_array_equal(np.asarray(cs.packed[: len(uniq)]), uniq)
+    assert (np.asarray(cs.packed[len(uniq):]) == pad_value(cs.packed.dtype)).all()
+
+
+def test_downsample_matches_reference():
+    sc = scenes.indoor_scene(0, room=(80, 64, 32))
+    cs = make_coord_set(sc.coords, sc.layout)
+    for m in (1, 2, 3):
+        ds = downsample(cs, sc.layout, m)
+        ref = reference.downsample_reference(sc.coords, m)
+        got, _ = unpack(ds.packed[: int(ds.count)], sc.layout)
+        np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+# ---------------------------------------------------------------------------
+# kernel map construction: zdelta vs bsearch vs hash vs brute force
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,stride", [(3, 1), (5, 1), (3, 2), (5, 2), (7, 1), (3, 4)])
+def test_zdelta_matches_reference_submanifold(K, stride):
+    sc = scenes.indoor_scene(1, room=(60, 48, 24))
+    coords = sc.coords[(sc.coords % stride == 0).all(1)] if stride > 1 else sc.coords
+    if stride > 1:  # quantize to stride multiples (downsampled layer input)
+        coords = np.unique((sc.coords >> int(np.log2(stride))) << int(np.log2(stride)), axis=0)
+    cs = make_coord_set(coords, sc.layout)
+    _, anchors, zstep = zdelta_offsets(K, stride, sc.layout)
+    m = np.asarray(zdelta_search(cs, cs, anchors, zstep, K=K))
+    ref = reference.kernel_map_reference(coords, coords, K, stride)
+    np.testing.assert_array_equal(m[: len(coords)], ref)
+    assert (m[len(coords):] == -1).all()
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_zdelta_strided_downsample_layer(K):
+    sc = scenes.indoor_scene(2, room=(60, 48, 24))
+    cs = make_coord_set(sc.coords, sc.layout)
+    ds = downsample(cs, sc.layout, 1)
+    _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+    m = np.asarray(zdelta_search(cs, ds, anchors, zstep, K=K))
+    out_coords = reference.downsample_reference(sc.coords, 1)
+    ref = reference.kernel_map_reference(sc.coords, out_coords, K, 1)
+    np.testing.assert_array_equal(m[: len(out_coords)], ref)
+
+
+def test_bsearch_and_hash_match_zdelta():
+    sc = scenes.outdoor_scene(3, extent=(256, 256, 32), n_objects=8)
+    cs = make_coord_set(sc.coords, sc.layout)
+    K = 3
+    _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+    mz = np.asarray(zdelta_search(cs, cs, anchors, zstep, K=K))
+    offs = pack_offsets(jnp.asarray(offset_grid(K, 1)), sc.layout)
+    mb = np.asarray(simple_bsearch(cs, cs, offs, K=K))
+    np.testing.assert_array_equal(mz, mb)
+    tk, tv = hashmap.build_table(cs, table_size=hashmap.table_size_for(cs.capacity))
+    mh = np.asarray(hashmap.hash_kernel_map(tk, tv, cs, offs, K=K))
+    np.testing.assert_array_equal(mz, mh)
+
+
+def test_density_property_on_surfaces():
+    """The paper's Fig. 3b: density decreases with offset L1 norm on
+    surface-like scenes; center offset is 100% dense."""
+    sc = scenes.indoor_scene(5, room=(100, 80, 40))
+    cs = make_coord_set(sc.coords, sc.layout)
+    K = 5
+    _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+    m = zdelta_search(cs, cs, anchors, zstep, K=K)
+    kmap = KernelMap(m=m, out_count=cs.count, in_count=cs.count)
+    d = density_by_l1(kmap, K, 1)
+    assert d[0] == pytest.approx(1.0)
+    assert d[1] > d[3] > d[6]  # monotone-ish decay
+    assert d[6] < 0.4
+
+
+# ---------------------------------------------------------------------------
+# dataflows vs dense oracle and vs each other
+# ---------------------------------------------------------------------------
+
+def _setup_layer(seed, K, cin, cout, room=(48, 40, 20)):
+    sc = scenes.indoor_scene(seed, room=room)
+    cs = make_coord_set(sc.coords, sc.layout)
+    n = len(sc.coords)
+    rng = np.random.default_rng(seed)
+    feats = np.zeros((cs.capacity, cin), np.float32)
+    feats[:n] = rng.normal(size=(n, cin)).astype(np.float32)
+    w = rng.normal(size=(K ** 3, cin, cout)).astype(np.float32) / np.sqrt(cin * K ** 3)
+    _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+    m = zdelta_search(cs, cs, anchors, zstep, K=K)
+    kmap = KernelMap(m=m, out_count=cs.count, in_count=cs.count)
+    ref = reference.dense_conv_reference(sc.coords, feats[:n], sc.coords, w, K, 1)
+    return sc, cs, feats, w, kmap, ref, n
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_output_stationary_vs_dense(K):
+    _, _, feats, w, kmap, ref, n = _setup_layer(7, K, 8, 12)
+    for fuse in (False, True):
+        out = np.asarray(output_stationary(jnp.asarray(feats), kmap.m, jnp.asarray(w), fuse=fuse))
+        np.testing.assert_allclose(out[:n], ref, rtol=2e-4, atol=2e-5)
+        assert (out[n:] == 0).all()
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_weight_stationary_vs_dense(K):
+    _, cs, feats, w, kmap, ref, n = _setup_layer(8, K, 8, 12)
+    out = np.asarray(weight_stationary(jnp.asarray(feats), kmap.m, jnp.asarray(w),
+                                       capacity=kmap.m.shape[0]))
+    np.testing.assert_allclose(out[:n], ref, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("t", [0, 2, 3, 7])
+def test_hybrid_matches_dense(t):
+    K = 5
+    _, cs, feats, w, kmap, ref, n = _setup_layer(9, K, 8, 12)
+    out = np.asarray(hybrid(jnp.asarray(feats), kmap, jnp.asarray(w), K=K,
+                            stride=1, t=t, ws_capacity=kmap.m.shape[0]))
+    np.testing.assert_allclose(out[:n], ref, rtol=2e-4, atol=2e-5)

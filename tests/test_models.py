@@ -1,0 +1,131 @@
+"""Model substrate correctness: forward/loss/grad finite, prefill≡decode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.common import ModelConfig, SuperBlock, dense_lm, moe_lm
+from repro.models import transformer as tf
+from repro.models import mamba, xlstm
+
+
+def tiny_dense():
+    return dense_lm("tiny", n_layers=3, d_model=64, n_heads=4, n_kv=2,
+                    d_ff=128, vocab=256, dtype="float32")
+
+
+def tiny_moe():
+    return moe_lm("tinymoe", n_layers=2, d_model=64, n_heads=4, n_kv=4,
+                  d_ff_expert=96, vocab=128, n_experts=8, top_k=2,
+                  capacity_factor=2.0, dtype="float32")
+
+
+def tiny_jamba():
+    return ModelConfig(
+        name="tinyjamba", d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=128,
+        superblocks=(SuperBlock(blocks=(("attn", "moe"), ("mamba", "dense"),
+                                        ("mamba", "moe"), ("mamba", "dense")),
+                                repeat=2),),
+        n_experts=4, top_k=2, d_ff_expert=96, capacity_factor=2.0,
+        subquadratic=True, dtype="float32")
+
+
+def tiny_xlstm():
+    return ModelConfig(
+        name="tinyxlstm", d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=0, vocab=128,
+        superblocks=(SuperBlock(blocks=(("mlstm", "none"), ("mlstm", "none"),
+                                        ("slstm", "none")), repeat=2),),
+        subquadratic=True, dtype="float32")
+
+
+CONFIGS = [tiny_dense, tiny_moe, tiny_jamba, tiny_xlstm]
+
+
+@pytest.mark.parametrize("mk", CONFIGS, ids=lambda f: f.__name__)
+def test_forward_loss_grad(mk):
+    cfg = mk()
+    params, axes = tf.init_params(cfg, jax.random.key(0))
+    B, S = 2, 64
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    logits = tf.forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, g = jax.value_and_grad(lambda p: tf.loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves)
+    # axes table covers every parameter path
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, _ in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        # stacked sb params recorded under sbN/... ; embed etc. direct
+        assert any(key == k or key.startswith(k.split("/")[0]) for k in axes), key
+
+
+@pytest.mark.parametrize("mk", CONFIGS, ids=lambda f: f.__name__)
+def test_prefill_then_decode_matches_forward(mk):
+    """Gold serving test: full forward logits at position t must equal
+    prefill(prompt[:t]) + decode_step chain."""
+    cfg = mk()
+    params, _ = tf.init_params(cfg, jax.random.key(0))
+    B, S, cache_len = 2, 24, 32
+    tokens = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+    full = tf.forward(params, cfg, {"tokens": tokens})
+
+    n_prompt = S - 4
+    logits_p, state = tf.prefill(params, cfg,
+                                 {"tokens": tokens[:, :n_prompt]}, cache_len)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0], np.float32),
+        np.asarray(full[:, n_prompt - 1], np.float32), rtol=2e-2, atol=2e-2)
+    # decode the remaining tokens one by one, comparing against full forward
+    for t in range(n_prompt, S):
+        lg, state = tf.decode_step(params, cfg, state,
+                                   {"tokens": tokens[:, t: t + 1]},
+                                   jnp.asarray(t))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full[:, t], np.float32), rtol=2e-2, atol=2e-2,
+            err_msg=f"decode mismatch at t={t} for {cfg.name}")
+
+
+def test_mamba_chunked_scan_invariance():
+    """Chunk size must not change the result (chunkwise == full scan)."""
+    cfg = tiny_jamba()
+    ctxp, _ = tf.init_params(cfg, jax.random.key(0))
+    p = jax.tree.map(lambda a: a[0], ctxp["sb0"])["b1"]  # first mamba block
+    x = jax.random.normal(jax.random.key(3), (2, 64, cfg.d_model))
+    y1 = mamba.mamba_fwd(p, cfg, x, chunk=64)
+    y2 = mamba.mamba_fwd(p, cfg, x, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_chunked_scan_invariance():
+    cfg = tiny_xlstm()
+    ctxp, _ = tf.init_params(cfg, jax.random.key(0))
+    p = jax.tree.map(lambda a: a[0], ctxp["sb0"])["b0"]
+    x = jax.random.normal(jax.random.key(4), (2, 64, cfg.d_model))
+    y1 = xlstm.mlstm_fwd(p, cfg, x, chunk=64)
+    y2 = xlstm.mlstm_fwd(p, cfg, x, chunk=8)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_vlm_embeds_prefix_loss():
+    cfg = dense_lm("tinyvlm", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                   d_ff=128, vocab=128, dtype="float32")
+    params, _ = tf.init_params(cfg, jax.random.key(0))
+    B, Si, St = 2, 8, 16
+    batch = {
+        "embeds": jax.random.normal(jax.random.key(5), (B, Si, cfg.d_model)),
+        "tokens": jax.random.randint(jax.random.key(6), (B, St), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.key(7), (B, St), 0, cfg.vocab),
+    }
+    loss = tf.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    logits = tf.forward(params, cfg, batch)
+    assert logits.shape == (B, Si + St, cfg.vocab)
