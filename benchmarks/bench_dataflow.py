@@ -1,0 +1,74 @@
+"""Backend trajectory bench: per-layer latency + modeled HBM bytes for the
+XLA and Pallas dataflow backends, persisted to BENCH_dataflow.json so the
+perf history accumulates across PRs.
+
+Off-TPU the Pallas numbers time the interpreter (relative algorithmic cost
+only — see benchmarks/common.py); the HBM-bytes model is host-independent
+and is the number the fused kernels are expected to move on device.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KernelMap, hybrid, tune_threshold_cost_model,
+                        zdelta_offsets, zdelta_search)
+from .common import emit, hybrid_layer_bytes, prep, scene_set, timeit, us
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "BENCH_dataflow.json")
+LAYERS = [(16, 16, 3), (32, 32, 3), (16, 16, 5)]
+BACKENDS = ("xla", "pallas")
+
+
+def run(backend: str = "xla"):
+    name, sc = scene_set()[0]
+    cs, _ = prep(sc)
+    rows, layers = [], []
+    for cin, cout, K in LAYERS:
+        _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+        m = zdelta_search(cs, cs, anchors, zstep, K=K)
+        kmap = KernelMap(m=m, out_count=cs.count, in_count=cs.count)
+        cap = int(np.asarray(kmap.column_counts()).max()) + 8
+        t_best = tune_threshold_cost_model(kmap, K=K, stride=1, cin=cin,
+                                           cout=cout).t_best
+        feats = jax.random.normal(jax.random.key(0), (cs.capacity, cin))
+        w = jax.random.normal(jax.random.key(1), (K ** 3, cin, cout)) * 0.05
+        for be in BACKENDS:
+            fn = jax.jit(lambda f, km, ww, be=be: hybrid(
+                f, km, ww, K=K, stride=1, t=t_best, ws_capacity=cap,
+                backend=be))
+            dt = timeit(fn, feats, kmap, w, repeats=3)
+            bts = hybrid_layer_bytes(kmap, K, 1, t_best, cin, cout, be)
+            layers.append({
+                "name": f"l{cin}_{cout}_{K}", "backend": be, "t": int(t_best),
+                "us": us(dt), "hbm_bytes": bts,
+            })
+            rows.append((f"dataflow/l{cin}_{cout}_{K}/{be}", us(dt),
+                         f"hbm_mb={bts['total'] / 2 ** 20:.1f}"))
+    rec = {
+        "requested_backend": backend,
+        "host_backend": jax.default_backend(),
+        "scene": name,
+        "note": ("pallas timings run the interpreter off-TPU; "
+                 "hbm_bytes is the device traffic model"),
+        "layers": layers,
+    }
+    hist = []
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            hist = json.load(f)
+            if not isinstance(hist, list):
+                hist = [hist]
+    hist.append(rec)
+    with open(RESULTS, "w") as f:
+        json.dump(hist, f, indent=1)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_coord_set
+from repro.core import build_coord_set, hbm_bytes_model, l1_partition
 from repro.data import scenes
 
 
@@ -60,3 +60,25 @@ def emit(rows):
     """Print name,us_per_call,derived CSV rows (harness contract)."""
     for name, t_us, derived in rows:
         print(f"{name},{t_us},{derived}")
+
+
+def hybrid_layer_bytes(kmap, K: int, stride: int, t: int, cin: int, cout: int,
+                       backend: str) -> dict:
+    """Modeled HBM traffic of one hybrid layer = OS bytes over its dense
+    columns + WS bytes over its sparse columns (the split the layer
+    executes), via core.dataflow.hbm_bytes_model. Shared by the dataflow
+    bench and the fig8/fig9 backend sweeps."""
+    counts = np.asarray(kmap.column_counts())
+    mcap = kmap.m.shape[0]
+    dense, sparse = l1_partition(K, stride, t)
+    total = {"total": 0, "gather": 0, "intermediate": 0, "weights": 0, "out": 0}
+    if dense.size:
+        b = hbm_bytes_model(mcap, len(dense), cin, cout, backend=backend,
+                            dataflow="os", nnz=int(counts[dense].sum()))
+        total = {k: total[k] + b[k] for k in total}
+    if sparse.size:
+        b = hbm_bytes_model(mcap, len(sparse), cin, cout, backend=backend,
+                            dataflow="ws", nnz=int(counts[sparse].sum()),
+                            capacity=int(counts.max()) + 8)
+        total = {k: total[k] + b[k] for k in total}
+    return total

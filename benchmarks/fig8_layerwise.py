@@ -1,25 +1,32 @@
 """Paper Fig. 8: layerwise performance across engines, (Cin, Cout, K)
-sweep. Engines: Spira (zdelta + best dataflow) vs hash-engine
+sweep. Engines: Spira (zdelta + best dataflow, swept over both feature
+backends: XLA vs fused-Pallas implicit GEMM) vs hash-engine
 (TorchSparse-style: hash map + output-stationary) vs bsearch-engine
 (Minuet-style: binary search + weight-stationary). Full layer time =
-mapping + feature computation, geometric-mean over scenes."""
+mapping + feature computation, geometric-mean over scenes. Spira rows also
+report the modeled HBM bytes (core.dataflow.hbm_bytes_model) so the fused
+backend's gather-intermediate savings show up next to wall-clock."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import (KernelMap, hybrid, offset_grid, output_stationary,
-                        pack_offsets, simple_bsearch, tune_threshold_cost_model,
-                        weight_stationary, zdelta_offsets, zdelta_search)
+                        pack_offsets, simple_bsearch,
+                        tune_threshold_cost_model, weight_stationary,
+                        zdelta_offsets, zdelta_search)
 from repro.core import hashmap
-from .common import emit, prep, scene_set, timeit, us
+from .common import emit, hybrid_layer_bytes, prep, scene_set, timeit, us
 
 LAYERS = [(16, 32, 3), (32, 32, 3), (64, 64, 3), (16, 16, 5), (32, 32, 5)]
+BACKENDS = ("xla", "pallas")
 
 
 def run():
     rows = []
     for cin, cout, K in LAYERS:
-        geo = {"spira": [], "hash_os": [], "bsearch_ws": []}
+        geo = {f"spira_{be}": [] for be in BACKENDS}
+        geo.update({"hash_os": [], "bsearch_ws": []})
+        mb = {be: [] for be in BACKENDS}
         for name, sc in scene_set()[:2]:
             cs, _ = prep(sc)
             _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
@@ -32,11 +39,17 @@ def run():
             t_best = tune_threshold_cost_model(kmap, K=K, stride=1, cin=cin,
                                                cout=cout).t_best
 
-            def spira(c, f, ww):
-                mm = zdelta_search(c, c, anchors, zstep, K=K)
-                km = KernelMap(m=mm, out_count=c.count, in_count=c.count)
-                return hybrid(f, km, ww, K=K, stride=1, t=t_best,
-                              ws_capacity=cap)
+            for be in BACKENDS:
+                def spira(c, f, ww, be=be):
+                    mm = zdelta_search(c, c, anchors, zstep, K=K)
+                    km = KernelMap(m=mm, out_count=c.count, in_count=c.count)
+                    return hybrid(f, km, ww, K=K, stride=1, t=t_best,
+                                  ws_capacity=cap, backend=be)
+
+                geo[f"spira_{be}"].append(
+                    timeit(jax.jit(spira), cs, feats, w, repeats=3))
+                mb[be].append(
+                    hybrid_layer_bytes(kmap, K, 1, t_best, cin, cout, be)["total"])
 
             ts = hashmap.table_size_for(cs.capacity)
 
@@ -49,13 +62,15 @@ def run():
                 mm = simple_bsearch(c, c, offs, K=K)
                 return weight_stationary(f, mm, ww, capacity=cap)
 
-            geo["spira"].append(timeit(jax.jit(spira), cs, feats, w, repeats=3))
             geo["hash_os"].append(timeit(jax.jit(hash_os), cs, feats, w, repeats=3))
             geo["bsearch_ws"].append(timeit(jax.jit(bsearch_ws), cs, feats, w, repeats=3))
         gm = {k: float(np.exp(np.mean(np.log(v)))) for k, v in geo.items()}
         for k, v in gm.items():
-            rows.append((f"fig8/l{cin}_{cout}_{K}/{k}", us(v),
-                         f"speedup_vs_hash={gm['hash_os'] / v:.2f}"))
+            derived = f"speedup_vs_hash={gm['hash_os'] / v:.2f}"
+            for be in BACKENDS:
+                if k == f"spira_{be}":
+                    derived += f";hbm_mb={np.mean(mb[be]) / 2 ** 20:.1f}"
+            rows.append((f"fig8/l{cin}_{cout}_{K}/{k}", us(v), derived))
     emit(rows)
     return rows
 

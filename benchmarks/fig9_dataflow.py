@@ -1,13 +1,18 @@
 """Paper Fig. 9: layerwise Spira speedup with output-stationary,
 weight-stationary and hybrid dual-dataflow across thresholds t, for
-submanifold layer configs (Cin, Cout, K) with s_p = 1."""
+submanifold layer configs (Cin, Cout, K) with s_p = 1.
+
+The t sweep runs on the XLA backend; at the three canonical operating
+points (full WS t=0, best hybrid t, full OS) both feature backends are
+measured side by side, with the modeled HBM bytes (gather-intermediate
+savings of the fused Pallas path) in the derived column."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import (KernelMap, candidate_ts, hybrid, zdelta_offsets,
                         zdelta_search)
-from .common import emit, prep, scene_set, timeit, us
+from .common import emit, hybrid_layer_bytes, prep, scene_set, timeit, us
 
 LAYERS = [(16, 16, 3), (32, 32, 3), (64, 64, 3), (16, 16, 5), (32, 32, 5),
           (64, 96, 5)]
@@ -38,6 +43,16 @@ def run():
                 best = (t, dt)
         rows.append((f"fig9/l{cin}_{cout}_{K}/best", us(best[1]),
                      f"t_best={best[0]}"))
+        # backend side-by-side at the canonical operating points
+        for t, point in ((0, "ws"), (best[0], "best"),
+                         (candidate_ts(K, 1)[-1], "os")):
+            for be in ("xla", "pallas"):
+                fn = jax.jit(lambda f, km, ww, t=t, be=be: hybrid(
+                    f, km, ww, K=K, stride=1, t=t, ws_capacity=cap, backend=be))
+                dt = timeit(fn, feats, kmap, w, repeats=3)
+                mb = hybrid_layer_bytes(kmap, K, 1, t, cin, cout, be)["total"] / 2 ** 20
+                rows.append((f"fig9/l{cin}_{cout}_{K}/{point}_{be}", us(dt),
+                             f"t={t};hbm_mb={mb:.1f}"))
     emit(rows)
     return rows
 

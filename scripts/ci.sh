@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + an interpret-mode Pallas smoke subset.
+#
+#   scripts/ci.sh          # full tier-1 + smoke
+#   scripts/ci.sh --smoke  # smoke subset only (fast signal)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" != "--smoke" ]]; then
+  # tier-1: the full suite (ROADMAP.md contract)
+  python -m pytest -x -q
+fi
+
+# interpret-mode Pallas smoke: every fused kernel + the backend dispatch +
+# the zdelta_pallas indexing engine, on tiny shapes (seconds, not minutes).
+python -m pytest -x -q \
+  tests/test_dataflow_backends.py::test_gather_gemm_bitmatch \
+  tests/test_dataflow_backends.py::test_ws_scatter_bitmatch \
+  tests/test_dataflow_backends.py::test_dispatch_pads_untiled_rows \
+  tests/test_dataflow_backends.py::test_zdelta_pallas_engine_matches_zdelta \
+  "tests/test_kernels.py::test_zdelta_window_matches_xla[3-512]"
+
+# the dataflow bench must stay runnable end-to-end (writes BENCH_dataflow.json)
+python -m benchmarks.run --backend pallas dataflow >/dev/null
+echo "ci.sh: OK"

@@ -11,6 +11,35 @@ bitwise-reproducible (DESIGN.md §2).
 Hybrid: a static L1-norm threshold t splits offsets into a dense set (OS)
 and a sparse set (WS); both partial results sum into the output. The split
 is host-static so XLA sees a fixed graph (kernel_map.l1_partition).
+
+Backend-dispatch contract
+-------------------------
+Every dataflow takes ``backend`` ∈ {"auto", "xla", "pallas"}:
+
+* ``"xla"``    — the jnp paths below: OS materializes the gathered
+  features (``[M, Cin]`` per offset, or ``[M, Kd, Cin]`` with ``fuse``)
+  in HBM; WS scans offsets with a cumsum-compaction + scatter merge.
+* ``"pallas"`` — the fused implicit-GEMM kernels
+  (``kernels/spconv_gather_gemm.py`` / ``kernels/ws_scatter_gemm.py``):
+  the kernel-map gather/compaction happens *inside* the kernel from
+  HBM-resident F_in, so no gathered-feature intermediate ever exists in
+  HBM. On non-TPU hosts the kernels run in interpreter mode (identical
+  numerics, CPU-speed) so Pallas-tuned specs remain runnable anywhere.
+* ``"auto"``   — "pallas" on TPU, "xla" elsewhere
+  (``kernels.ops.resolve_backend``).
+
+Numerics are identical across backends: fp32 accumulation per offset over
+the same operands in the same offset order (the parity suite in
+tests/test_dataflow_backends.py asserts bit-equality on valid rows).
+Tile sizes ``bm``/``bn`` (0 = auto: 128-row tiles with padding, 128- or
+whole-``Cout`` channel tiles) come from the layer spec and are chosen by
+``core.tuner.tune_layer_measure``, which co-tunes (t, backend, bm, bn, W)
+per layer. The kernel-map side has the same split: ``network_plan``'s
+``engine="zdelta_pallas"`` uses the windowed Pallas search with a per-tile
+XLA fallback when a window overflows (see build_network_plan).
+
+``hbm_bytes_model`` is the shared analytic traffic model benchmarks use to
+report the bytes the fused path saves next to wall-clock.
 """
 from __future__ import annotations
 
@@ -32,17 +61,27 @@ def _mask_rows(x: jax.Array, count: jax.Array) -> jax.Array:
 # output-stationary
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("fuse",))
+@partial(jax.jit, static_argnames=("fuse", "backend", "bm", "bn"))
 def output_stationary(
     features: jax.Array,   # [N_cap, Cin]
     m: jax.Array,          # int32 [M_cap, Kd]  (kernel-map column subset)
     weights: jax.Array,    # [Kd, Cin, Cout]
     *,
     fuse: bool = False,
+    backend: str = "xla",
+    bm: int = 0,
+    bn: int = 0,
 ) -> jax.Array:
-    """OS dataflow. ``fuse=True`` materializes one [M, Kd, Cin] gather and a
-    single MXU contraction (max utilization, Kd·Cin-deep); default scans
-    offsets with an [M, Cin] working set (memory-safe)."""
+    """OS dataflow. XLA: ``fuse=True`` materializes one [M, Kd, Cin] gather
+    and a single MXU contraction (max utilization, Kd·Cin-deep); default
+    scans offsets with an [M, Cin] working set (memory-safe). Pallas: the
+    implicit-GEMM kernel — gather fused in, no HBM intermediate, ``fuse``
+    is moot."""
+    from repro.kernels import ops as kops
+    use_pallas, _ = kops.resolve_backend(backend)
+    if use_pallas:
+        return kops.spconv_os_fused(features, m, weights, impl="pallas",
+                                    bm=bm, bn=bn)
     mc = m.shape[0]
     if fuse:
         idx = jnp.clip(m, 0)
@@ -64,21 +103,30 @@ def output_stationary(
 # weight-stationary
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("capacity",))
+@partial(jax.jit, static_argnames=("capacity", "backend", "bm", "bn"))
 def weight_stationary(
     features: jax.Array,   # [N_cap, Cin]
     m: jax.Array,          # int32 [M_cap, Ks]
     weights: jax.Array,    # [Ks, Cin, Cout]
     *,
     capacity: int,
+    backend: str = "xla",
+    bm: int = 0,
+    bn: int = 0,
 ) -> jax.Array:
     """WS dataflow with static per-offset pair capacity.
 
     Valid pairs beyond ``capacity`` are dropped (choose capacity from the
     tuner / column statistics; ``capacity = M_cap`` is always lossless).
     The per-offset compaction is the TPU replacement for the paper's
-    filtering post-processing; the merge replaces atomicAdd (see module doc).
-    """
+    filtering post-processing; the merge replaces atomicAdd (see module
+    doc). Pallas: the fused compact+GEMM+merge kernel, same drop
+    semantics."""
+    from repro.kernels import ops as kops
+    use_pallas, _ = kops.resolve_backend(backend)
+    if use_pallas:
+        return kops.spconv_ws_fused(features, m, weights, capacity=capacity,
+                                    impl="pallas", bc=bm, bn=bn)
     mc = m.shape[0]
     rows = jnp.arange(mc, dtype=jnp.int32)
 
@@ -120,17 +168,64 @@ def hybrid(
     t: int,
     ws_capacity: int,
     fuse_dense: bool = False,
+    backend: str = "xla",
+    bm: int = 0,
+    bn: int = 0,
 ) -> jax.Array:
     """Adaptive hybrid dataflow: offsets with L1 < t via OS, rest via WS.
 
     t = 0 degenerates to full WS; t = L1NormMax+1 to full OS (paper §5.4).
+    ``backend`` selects the kernel family for both halves (module doc).
     """
     dense_idx, sparse_idx = l1_partition(K, stride, t)
     out = jnp.zeros((kmap.m.shape[0], weights.shape[-1]), features.dtype)
     if dense_idx.size:
         out = out + output_stationary(
-            features, kmap.m[:, dense_idx], weights[dense_idx], fuse=fuse_dense)
+            features, kmap.m[:, dense_idx], weights[dense_idx],
+            fuse=fuse_dense, backend=backend, bm=bm, bn=bn)
     if sparse_idx.size:
         out = out + weight_stationary(
-            features, kmap.m[:, sparse_idx], weights[sparse_idx], capacity=ws_capacity)
+            features, kmap.m[:, sparse_idx], weights[sparse_idx],
+            capacity=ws_capacity, backend=backend, bm=bm, bn=bn)
     return out
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM traffic model (shared by benchmarks + cost-model tuner)
+# ---------------------------------------------------------------------------
+
+def hbm_bytes_model(M: int, Kd: int, Cin: int, Cout: int, itemsize: int = 4,
+                    *, backend: str = "xla", dataflow: str = "os",
+                    nnz: Optional[int] = None,
+                    capacity: Optional[int] = None) -> dict:
+    """Modeled HBM bytes for one layer's feature computation.
+
+    Counts gather reads, gathered-intermediate write+re-read (XLA only —
+    the fused Pallas kernels never materialize it), merge traffic (WS/XLA:
+    Ks passes over the [M, Cout] accumulator; Pallas: output stays
+    VMEM-resident), plus weights and output. ``nnz`` = valid kernel-map
+    entries (defaults to dense M·Kd).
+    """
+    nnz = M * Kd if nnz is None else int(nnz)
+    w_bytes = Kd * Cin * Cout * itemsize
+    out_bytes = M * Cout * itemsize
+    if dataflow == "os":
+        if backend == "pallas":
+            gather, intermediate = nnz * Cin * itemsize, 0
+        else:
+            gather = M * Kd * Cin * itemsize
+            intermediate = 2 * M * Kd * Cin * itemsize
+    else:  # ws
+        cap = M if capacity is None else int(capacity)
+        if backend == "pallas":
+            gather, intermediate = nnz * Cin * itemsize, 0
+        else:
+            gather = Kd * cap * Cin * itemsize
+            intermediate = Kd * (cap * Cin + 2 * M * Cout) * itemsize
+    return {
+        "total": gather + intermediate + w_bytes + out_bytes,
+        "gather": gather,
+        "intermediate": intermediate,
+        "weights": w_bytes,
+        "out": out_bytes,
+    }

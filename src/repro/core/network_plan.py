@@ -61,20 +61,51 @@ def plan_levels(specs: Sequence[SpConvSpec]) -> Tuple[int, ...]:
     return tuple(sorted(lv))
 
 
+def _zdelta_pallas_map(inputs: CoordSet, outputs: CoordSet, anchors, zstep,
+                       *, K: int, W: int = 0) -> jax.Array:
+    """Windowed Pallas z-delta search with per-tile XLA overflow fallback.
+
+    Any (tile, offset-group) cell whose queries ran past the DMA'd window
+    is recomputed by the XLA search; `lax.cond` keeps the fallback off the
+    execution path when nothing overflowed (the common case for
+    W ≥ 4·bm on surface scenes — measured in benchmarks/fig10)."""
+    from repro.kernels.zdelta_window import zdelta_window_search
+
+    mcap = outputs.packed.shape[0]
+    bm = next(b for b in (128, 64, 32, 16, 8, 4, 2, 1) if mcap % b == 0)
+    n = inputs.packed.shape[0]
+    W = min(W or max(4 * bm, 512), n)
+    interpret = jax.default_backend() != "tpu"
+    m_p, ovf = zdelta_window_search(inputs, outputs, anchors, zstep, K=K,
+                                    W=W, bm=bm, interpret=interpret)
+
+    def patched():
+        m_x = zdelta_search(inputs, outputs, anchors, zstep, K=K)
+        bad = jnp.repeat(jnp.repeat(ovf > 0, bm, axis=0), K, axis=1)
+        return jnp.where(bad, m_x, m_p)
+
+    return jax.lax.cond(ovf.sum() > 0, patched, lambda: m_p)
+
+
 @partial(jax.jit, static_argnames=("specs", "layout", "engine"))
 def build_network_plan(
     packed_raw: jax.Array,
     *,
     specs: Tuple[SpConvSpec, ...],
     layout: BitLayout,
-    engine: str = "zdelta",   # "zdelta" | "bsearch" | "hash"
+    engine: str = "zdelta",   # "zdelta" | "zdelta_pallas" | "bsearch" | "hash"
 ) -> NetworkPlan:
     """One-shot, network-wide indexing: a single XLA module containing every
     layer's downsample + mapping, all derived from V0.
 
     ``engine`` selects the mapping algorithm (zdelta = Spira; bsearch and
     hash are the paper's baselines) so benchmarks compare within one code
-    path.
+    path. ``zdelta_pallas`` runs the windowed-DMA Pallas kernel
+    (kernels/zdelta_window.py; interpret-mode off TPU) per layer, with a
+    per-tile fallback to the XLA search for window-overflow cells — maps
+    are identical to ``zdelta`` by construction. The per-layer window W
+    comes from each spec (``spec.window``, 0 = auto; the tuner's
+    ``plan_window`` sizes it exactly).
     """
     v0 = build_coord_set(packed_raw)
     coords: Dict[int, CoordSet] = {}
@@ -88,6 +119,10 @@ def build_network_plan(
         if engine == "zdelta":
             _, anchors, zstep = zdelta_offsets(s.K, stride, layout)
             m = zdelta_search(inputs, outputs, anchors, zstep, K=s.K)
+        elif engine == "zdelta_pallas":
+            _, anchors, zstep = zdelta_offsets(s.K, stride, layout)
+            m = _zdelta_pallas_map(inputs, outputs, anchors, zstep,
+                                   K=s.K, W=s.window)
         elif engine == "bsearch":
             offs = pack_offsets(jnp.asarray(offset_grid(s.K, stride)), layout)
             m = simple_bsearch(inputs, outputs, offs, K=s.K)

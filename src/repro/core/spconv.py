@@ -34,6 +34,11 @@ class SpConvSpec:
     ws_capacity: Optional[int] = None  # None -> lossless (M_cap)
     fuse_dense: bool = False
     bias: bool = True
+    # kernel-backend selection (core.dataflow module doc), tuner-persisted:
+    backend: str = "auto"         # "auto" | "xla" | "pallas"
+    bm: int = 0                   # row / WS-chunk tile (0 = auto)
+    bn: int = 0                   # output-channel tile (0 = auto)
+    window: int = 0               # zdelta_pallas search window (0 = auto)
 
     @property
     def submanifold(self) -> bool:
@@ -67,12 +72,15 @@ def apply_spconv(params: dict, spec: SpConvSpec, features: jax.Array,
     w = params["w"].astype(features.dtype)
     cap = spec.ws_capacity or kmap.m.shape[0]
     if spec.dataflow == "os":
-        out = output_stationary(features, kmap.m, w, fuse=spec.fuse_dense)
+        out = output_stationary(features, kmap.m, w, fuse=spec.fuse_dense,
+                                backend=spec.backend, bm=spec.bm, bn=spec.bn)
     elif spec.dataflow == "ws":
-        out = weight_stationary(features, kmap.m, w, capacity=cap)
+        out = weight_stationary(features, kmap.m, w, capacity=cap,
+                                backend=spec.backend, bm=spec.bm, bn=spec.bn)
     else:
         out = hybrid(features, kmap, w, K=spec.K, stride=spec.offset_stride,
-                     t=spec.t, ws_capacity=cap, fuse_dense=spec.fuse_dense)
+                     t=spec.t, ws_capacity=cap, fuse_dense=spec.fuse_dense,
+                     backend=spec.backend, bm=spec.bm, bn=spec.bn)
     if spec.bias:
         out = out + params["b"].astype(features.dtype)
         out = jnp.where((jnp.arange(out.shape[0]) < kmap.out_count)[:, None], out, 0)

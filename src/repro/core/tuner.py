@@ -1,29 +1,40 @@
-"""One-time per-layer dataflow threshold tuning (Spira §5.4).
+"""One-time per-layer tuning (Spira §5.4) over the full layer config.
 
 Same scheme as the paper (and Minuet/TorchSparse++/PCEngine): sample a few
-point clouds from the dataset, measure end-to-end layer latency for each
-integer threshold t ∈ {0, s_p, 2·s_p, …, L1NormMax+1}, pick the argmin.
-Happens once before inference; never on the serving path.
+point clouds from the dataset, measure end-to-end layer latency, pick the
+argmin. Happens once before inference; never on the serving path.
+
+Tuned dimensions (co-tuned jointly by :func:`tune_layer_measure` and
+persisted on the SpConvSpec via :func:`apply_tuning`):
+
+* ``t``        — hybrid dataflow threshold ∈ {0, s_p, …, L1NormMax+1}.
+* ``backend``  — "xla" vs "pallas" kernel family (core.dataflow module doc).
+* ``(bm, bn)`` — Pallas row/channel tile sizes (0 = dispatcher default).
+* ``W``        — zdelta_pallas search window; :func:`plan_window` computes
+                 the exact smallest overflow-free window from the sorted
+                 coordinate arrays, so no measurement is needed for it.
 
 Two modes:
 * ``measure``   — wall-clock the jitted layer on this host (honest on a real
-                  TPU; indicative on CPU).
+                  TPU; indicative on CPU — Pallas timings there go through
+                  the interpreter and are only meaningful on device).
 * ``cost_model``— analytic: OS cost ∝ Σ_dense |Vq|·Cin·Cout (wasted MACs on
                   invalid entries included), WS cost ∝ Σ_sparse nnz_k·Cin·Cout
-                  + merge traffic. Deterministic and device-free; used by the
-                  dry-run path where wall-clock is meaningless.
+                  + merge traffic; the backend axis adds the HBM-bytes model
+                  (dataflow.hbm_bytes_model). Deterministic and device-free;
+                  used by the dry-run path where wall-clock is meaningless.
 """
 from __future__ import annotations
 
 import time
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .dataflow import hybrid
+from .dataflow import hbm_bytes_model, hybrid
 from .kernel_map import KernelMap, l1_norm_max, l1_partition
 
 
@@ -86,3 +97,141 @@ def tune_threshold_cost_model(
         per_t[t] = os_macs + ws_macs + ws_merge
     t_best = min(per_t, key=per_t.get)
     return TuneResult(t_best=t_best, per_t=per_t, mode="cost_model")
+
+
+# ---------------------------------------------------------------------------
+# joint (t, backend, bm, bn, W) layer tuning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerTuneResult:
+    t_best: int
+    backend: str
+    bm: int
+    bn: int
+    window: int
+    per_config: dict   # (t, backend, bm, bn) -> seconds (or model cost)
+    mode: str
+
+
+def plan_window(inputs, outputs, packed_anchors: jax.Array, zstep: int,
+                *, K: int, bm: int = 128) -> int:
+    """Exact smallest overflow-free zdelta_pallas window for this layer.
+
+    Per (output tile, anchor group) the max *valid* query is
+    ``last_valid_row + anchor + (K−1)·zstep``. The kernel flags overflow
+    whenever a real query exceeds the window's last element, so the window
+    must reach the first array position ≥ that max query (or the array
+    end). PAD sentinel rows are excluded — the kernel ignores their
+    queries, and sizing off the int32-max tail would demand a near-whole-
+    array window. Host-side, two searchsorted calls — no kernel run.
+    """
+    from .voxel import pad_value
+
+    arr = np.asarray(inputs.packed).astype(np.int64)
+    n = arr.shape[0]
+    outp = np.asarray(outputs.packed)
+    pad = pad_value(outp.dtype)
+    mcap = outp.shape[0]
+    bm = next(b for b in (bm, 64, 32, 16, 8, 4, 2, 1) if mcap % b == 0)
+    out2d = outp.reshape(mcap // bm, bm).astype(np.int64)
+    valid_tile = out2d[:, 0] != pad        # pads sort last: tail tiles only
+    if not valid_tile.any():
+        return 1
+    last = np.where(out2d != pad, out2d, np.int64(-(2 ** 62))).max(axis=1)
+    anchors = np.asarray(packed_anchors).astype(np.int64)
+    lo = out2d[:, :1] + anchors[None, :]
+    hi = last[:, None] + anchors[None, :] + (K - 1) * int(zstep)
+    start = np.searchsorted(arr, lo[valid_tile], side="left")
+    first_ge = np.searchsorted(arr, hi[valid_tile], side="left")
+    # window must contain an element ≥ the max query (so `q > last_val`
+    # can't fire) — or run to the array end, which disarms the counter.
+    need = np.where(first_ge < n, first_ge + 1, n) - start
+    return max(1, min(int(need.max()), n))
+
+
+def tune_layer_measure(
+    features: jax.Array,
+    kmap: KernelMap,
+    weights: jax.Array,
+    *,
+    K: int,
+    stride: int,
+    ws_capacity: int,
+    backends: Sequence[str] = ("xla", "pallas"),
+    tiles: Sequence[Tuple[int, int]] = ((0, 0),),
+    repeats: int = 3,
+    coords: Optional[tuple] = None,   # (inputs, outputs, anchors, zstep)
+) -> LayerTuneResult:
+    """Joint wall-clock sweep over (t, backend, bm, bn); W planned exactly
+    from ``coords`` when given. Off-TPU, "pallas" times the interpreter —
+    restrict ``backends`` to ("xla",) there unless the sweep itself is
+    under test."""
+    per = {}
+    for backend in backends:
+        for bm, bn in tiles:
+            for t in candidate_ts(K, stride):
+                fn = jax.jit(lambda f, km, w, t=t, backend=backend, bm=bm,
+                             bn=bn: hybrid(f, km, w, K=K, stride=stride, t=t,
+                                           ws_capacity=ws_capacity,
+                                           backend=backend, bm=bm, bn=bn))
+                fn(features, kmap, weights).block_until_ready()  # compile+warm
+                tic = time.perf_counter()
+                for _ in range(repeats):
+                    fn(features, kmap, weights).block_until_ready()
+                per[(t, backend, bm, bn)] = (time.perf_counter() - tic) / repeats
+    t_best, backend, bm, bn = min(per, key=per.get)
+    window = plan_window(*coords, K=K) if coords else 0
+    return LayerTuneResult(t_best=t_best, backend=backend, bm=bm, bn=bn,
+                           window=window, per_config=per, mode="measure")
+
+
+def tune_layer_cost_model(
+    kmap: KernelMap,
+    *,
+    K: int,
+    stride: int,
+    cin: int,
+    cout: int,
+    itemsize: int = 4,
+    backends: Sequence[str] = ("xla", "pallas"),
+    merge_cost_rows: float = 4.0,
+    # relative weight of one HBM byte vs one MAC (roofline ridge point,
+    # calibrated once per platform).
+    byte_cost_macs: float = 30.0,
+) -> LayerTuneResult:
+    """Analytic joint (t, backend) choice: the MAC model of
+    ``tune_threshold_cost_model`` plus the HBM-bytes model per backend.
+    Tiles don't enter the cost model (returned as 0 = dispatcher default).
+    """
+    counts = np.asarray(kmap.column_counts()).astype(np.float64)
+    n_out = float(kmap.out_count)
+    mcap = kmap.m.shape[0]
+    per = {}
+    for backend in backends:
+        for t in candidate_ts(K, stride):
+            dense_idx, sparse_idx = l1_partition(K, stride, t)
+            macs = (len(dense_idx) * n_out * cin * cout
+                    + counts[sparse_idx].sum() * cin * cout
+                    + counts[sparse_idx].sum() * cout * merge_cost_rows)
+            bts = 0.0
+            if len(dense_idx):
+                bts += hbm_bytes_model(
+                    mcap, len(dense_idx), cin, cout, itemsize, backend=backend,
+                    dataflow="os", nnz=int(counts[dense_idx].sum()))["total"]
+            if len(sparse_idx):
+                bts += hbm_bytes_model(
+                    mcap, len(sparse_idx), cin, cout, itemsize, backend=backend,
+                    dataflow="ws", nnz=int(counts[sparse_idx].sum()),
+                    capacity=int(counts.max()) if counts.size else mcap)["total"]
+            per[(t, backend, 0, 0)] = macs + bts * byte_cost_macs / itemsize
+    t_best, backend, bm, bn = min(per, key=per.get)
+    return LayerTuneResult(t_best=t_best, backend=backend, bm=bm, bn=bn,
+                           window=0, per_config=per, mode="cost_model")
+
+
+def apply_tuning(spec, result: LayerTuneResult):
+    """Persist a tune result on a layer spec (returns a new SpConvSpec)."""
+    return dataclasses.replace(
+        spec, t=result.t_best, backend=result.backend, bm=result.bm,
+        bn=result.bn, window=result.window)

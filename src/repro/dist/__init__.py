@@ -1,0 +1,3 @@
+"""Distribution layer: logical-axis → mesh-axis sharding resolution."""
+from .sharding import (DEFAULT_RULES, param_shardings, seq_shard_active,
+                       shard_act, sharding_ctx, spec_for)

@@ -1,0 +1,176 @@
+"""Logical-axis sharding: one table from parameter/activation axis *names*
+to mesh axes, resolved lazily against whatever mesh is active.
+
+Models never mention mesh axes. Parameters are created with logical axis
+names (``models/common.ParamCtx``) and activations pass through
+:func:`shard_act` with logical tuples; this module owns the single
+name→mesh-axis table (:data:`DEFAULT_RULES`) and the policy toggles:
+
+* ``fsdp``       — whether ``d_model_fsdp`` parameter dims shard over the
+                   data axis (ZeRO-3 style) or stay replicated (serving).
+* ``seq_shard``  — long-context decode: the KV cache (and the score tensor
+                   that follows it) shards over *sequence* on the model axis
+                   instead of KV heads — flash-decoding split-K, emitted by
+                   the SPMD partitioner from the constraints alone.
+
+Resolution is defensive so one table serves every mesh: axes not present in
+the active mesh are dropped, a mesh axis is consumed at most once per spec
+(first logical dim wins), and an axis that does not divide the concrete dim
+is dropped rather than erroring — the constraint degrades to replication
+instead of failing compilation on a small host mesh.
+
+Everything is a no-op outside :func:`sharding_ctx`, so single-device tests
+and CPU smoke runs trace exactly the same code with zero constraints.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Sharded init must produce the same values as single-device init (elastic
+# restart / dist parity depend on it). The legacy threefry lowering is not
+# sharding-invariant under SPMD out_shardings; the partitionable form is.
+jax.config.update("jax_threefry_partitionable", True)
+
+# logical axis name -> preferred mesh axes (in priority order; a *prefix*
+# whose size product divides the dim is kept, the rest dropped).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                    # full-sequence activations stay whole
+    "seq_sp": ("model",),         # Megatron-SP residual stream between blocks
+    "kv_seq": ("model",),         # only when seq_shard=True (split-K decode)
+    "expert_cap": (),             # capacity-shard experiment flips this
+    # parameters
+    "vocab": ("model",),
+    "d_model": (),                # norms / router: replicated
+    "d_model_fsdp": ("data",),    # only when fsdp=True
+    "heads": ("model",),
+    "kv_heads": ("model",),       # only when seq_shard=False
+    "d_ff": ("model",),
+    "conv": (),
+    "experts": ("model",),        # EP: expert dim over the model axis
+    "expert_ff": (),              # EP already covers the FF dim
+    "layers": (),                 # lax.scan stacking dim
+}
+
+
+@dataclasses.dataclass
+class _Ctx:
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+    fsdp: bool
+    seq_shard: bool
+
+
+_STACK: list[_Ctx] = []
+
+
+def _current() -> Optional[_Ctx]:
+    return _STACK[-1] if _STACK else None
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, *, rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+                 fsdp: bool = True, seq_shard: bool = False):
+    """Activate a mesh + rule table for shard_act / param_shardings."""
+    ctx = _Ctx(mesh=mesh, rules=dict(DEFAULT_RULES if rules is None else rules),
+               fsdp=fsdp, seq_shard=seq_shard)
+    _STACK.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _STACK.pop()
+
+
+def seq_shard_active() -> bool:
+    ctx = _current()
+    return bool(ctx and ctx.seq_shard)
+
+
+def _candidates(name: Optional[str], ctx: _Ctx) -> Tuple[str, ...]:
+    if name is None:
+        return ()
+    if name == "d_model_fsdp" and not ctx.fsdp:
+        return ()
+    if name == "kv_seq" and not ctx.seq_shard:
+        return ()
+    if name == "kv_heads" and ctx.seq_shard:
+        return ()  # the model axis belongs to kv_seq in split-K decode
+    return tuple(ctx.rules.get(name, ()))
+
+
+def spec_for(logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+    """Resolve a logical axis tuple to a PartitionSpec under the active ctx.
+
+    With ``shape`` given, mesh axes that do not evenly divide the dim are
+    dropped (replicate rather than fail). Each mesh axis is used at most
+    once; earlier logical dims win.
+    """
+    ctx = _current()
+    if ctx is None:
+        return P()
+    mesh_axes = set(ctx.mesh.axis_names)
+    sizes = dict(ctx.mesh.shape)
+    used: set[str] = set()
+    parts: list = []
+    for d, name in enumerate(logical):
+        cand = [a for a in _candidates(name, ctx)
+                if a in mesh_axes and a not in used]
+        if shape is not None:
+            # keep the longest prefix whose size product divides the dim
+            while cand and shape[d] % int(np.prod([sizes[a] for a in cand])) != 0:
+                cand.pop()
+        used.update(cand)
+        if not cand:
+            parts.append(None)
+        elif len(cand) == 1:
+            parts.append(cand[0])
+        else:
+            parts.append(tuple(cand))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard_act(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain an activation's sharding; identity outside sharding_ctx."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    spec = spec_for(logical, x.shape)
+    if spec == P():
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_shardings(axes: Dict[str, Tuple[Optional[str], ...]], params):
+    """NamedShardings for a parameter (or optimizer-moment) pytree.
+
+    ``axes`` maps slash-joined tree paths to logical axis tuples — exactly
+    what ``init_params`` / ``abstract_params`` record. Every leaf must have
+    an entry whose rank matches (scanned stacks carry a leading "layers"
+    axis), which is asserted here so a drifted scope name fails loudly at
+    sharding time rather than silently replicating a tensor.
+    """
+    ctx = _current()
+    assert ctx is not None, "param_shardings requires an active sharding_ctx"
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        assert key in axes, f"no logical axes recorded for param {key!r}"
+        logical = axes[key]
+        assert len(logical) == len(leaf.shape), (key, logical, leaf.shape)
+        out.append(NamedSharding(ctx.mesh, spec_for(logical, leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,14 +1,30 @@
 """Pallas TPU kernels for the engine's compute hot-spots.
 
-  masked_group_gemm — fused output-stationary feature computation
-  zdelta_window     — hierarchical (HBM->VMEM windowed) z-delta search
-  flash_attention   — IO-aware attention for the LM substrate
+  spconv_gather_gemm — fused implicit-GEMM output-stationary spconv: the
+                       kernel-map gather runs *inside* the kernel from
+                       HBM-resident F_in (no [M, Kd, Cin] intermediate)
+  ws_scatter_gemm    — fused weight-stationary spconv: per-offset
+                       compaction + GEMM + deterministic merge in one
+                       sequential-grid pass (no atomics needed)
+  masked_group_gemm  — non-fused OS reference: masking + grouped GEMM over
+                       a caller-gathered [M, Kd, Cin] tensor
+  zdelta_window      — hierarchical (HBM->VMEM windowed) z-delta search
+  flash_attention    — IO-aware attention for the LM substrate
 
-Each kernel ships with a pure-jnp oracle in ref.py and a jit'd dispatch
-wrapper in ops.py (Pallas on TPU, XLA elsewhere; interpret=True for CPU
-validation — see tests/test_kernels.py shape/dtype sweeps).
+Backend-dispatch contract (shared with core/dataflow.py): ops.py wrappers
+take ``impl`` ∈ {"auto", "pallas", "xla"} — "auto" is Pallas on TPU and
+XLA elsewhere; "pallas" off-TPU runs the interpreter so tuned specs stay
+runnable on CPU. ``ops.resolve_backend`` is the single decision point.
+Tile sizes are auto-picked (M padded to 128-row tiles, Cout tiled by 128
+or taken whole) unless the layer spec pins them; the tuner
+(core/tuner.py) co-tunes (t, backend, bm, bn, W) per layer and persists
+the choice on the SpConvSpec. Each kernel ships with a pure-jnp oracle in
+ref.py (or its XLA twin in core/dataflow.py) and is validated in
+interpret mode by tests/test_kernels.py and tests/test_dataflow_backends.py.
 """
 from . import ops, ref
 from .masked_group_gemm import masked_group_gemm
+from .spconv_gather_gemm import spconv_gather_gemm
+from .ws_scatter_gemm import ws_scatter_gemm
 from .zdelta_window import zdelta_window_search
 from .flash_attention import flash_attention

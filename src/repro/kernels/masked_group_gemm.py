@@ -1,8 +1,8 @@
-"""Fused output-stationary feature computation: masked grouped GEMM.
+"""Non-fused output-stationary reference kernel: masked grouped GEMM.
 
 Given the XLA-side gather ``g[i, k, :] = F_in[M[i, k]]`` (invalid entries
-gather row 0), this kernel fuses the validity masking and the accumulation
-``out[i] = Σ_k mask[i,k] · g[i,k] @ W[k]`` in one pass:
+gather row 0), this kernel fuses only the validity masking and the
+accumulation ``out[i] = Σ_k mask[i,k] · g[i,k] @ W[k]`` in one pass:
 
   grid = (M/bm, Cout/bn, Kd)   — out tile revisited along the Kd axis
   g block  (bm, 1, Cin)  VMEM
@@ -10,10 +10,15 @@ gather row 0), this kernel fuses the validity masking and the accumulation
   m block  (bm, 1)       VMEM (int32 kernel-map column for masking)
   out block(bm, bn)      VMEM, accumulated in fp32 scratch
 
-vs. the unfused XLA path this avoids materializing the masked [M, Kd, Cin]
-intermediate in HBM (bytes win ≈ 2·M·Kd·Cin) and issues one MXU matmul per
-(k, tile) with the mask applied in-register. MXU alignment: choose bm, bn
-multiples of 128 and Cin a multiple of the lane width (pad features if not).
+Because its API takes the *pre-gathered* ``[M, Kd, Cin]`` tensor, the
+caller has already paid the gather intermediate's HBM write + re-read —
+this kernel only saves the separate masking pass and issues one MXU
+matmul per (k, tile) with the mask applied in-register. The HBM-bytes win
+(eliminating the intermediate entirely) belongs to the implicit-GEMM
+kernel in spconv_gather_gemm.py, which gathers inside the kernel; this
+one stays as the non-fused reference baseline for benchmarks. MXU
+alignment: choose bm, bn multiples of 128 and Cin a multiple of the lane
+width (pad features if not).
 """
 from __future__ import annotations
 

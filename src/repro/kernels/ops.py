@@ -1,36 +1,105 @@
 """Jit'd public wrappers: Pallas on TPU, XLA fallback elsewhere.
 
-Every op takes ``impl`` ∈ {"auto", "pallas", "xla"}; "auto" picks Pallas on
-TPU backends and XLA otherwise (so CPU dry-runs / smoke tests never trace a
-TPU kernel, while TPU runs get the fused path). ``interpret=True`` forces
-the Pallas body through the interpreter for CPU validation.
+Every op takes ``impl`` ∈ {"auto", "pallas", "xla"}:
+
+  "auto"   — Pallas on TPU backends, XLA otherwise (CPU dry-runs / smoke
+             tests never trace a TPU kernel; TPU runs get the fused path).
+  "pallas" — always the Pallas kernel; on non-TPU hosts it runs through
+             the interpreter (the CPU fallback the dataflow dispatch in
+             core/dataflow.py relies on, so ``backend="pallas"`` specs
+             stay runnable everywhere).
+  "xla"    — always the jnp reference path.
+
+``resolve_backend`` is the single source of that truth. The spconv entry
+points also own tile selection and shape padding, so arbitrary (M, Cout)
+work: M is padded to the row-tile with ``-1`` kernel-map rows (gather-
+skipped, zero output, sliced off), and Cout falls back to a single
+channel tile when 128 does not divide it.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
 from .masked_group_gemm import masked_group_gemm as _mgg_pallas
+from .spconv_gather_gemm import spconv_gather_gemm as _os_pallas
+from .ws_scatter_gemm import ws_scatter_gemm as _ws_pallas
 from .flash_attention import flash_attention as _fa_pallas
 
 
-def _use_pallas(impl: str) -> bool:
-    if impl == "pallas":
-        return True
+def resolve_backend(impl: str) -> Tuple[bool, bool]:
+    """(use_pallas, interpret) for an ``impl``/``backend`` string."""
+    if impl not in ("auto", "xla", "pallas"):
+        raise ValueError(f"unknown backend {impl!r}; want auto|xla|pallas")
+    on_tpu = jax.default_backend() == "tpu"
     if impl == "xla":
-        return False
-    return jax.default_backend() == "tpu"
+        return False, False
+    if impl == "pallas":
+        return True, not on_tpu
+    return on_tpu, False
+
+
+def _row_tile(M: int, bm: int) -> Tuple[int, int]:
+    """(tile, padded_M). 0 → auto: 128-row tiles, M padded up."""
+    bm = bm or 128
+    return bm, ((M + bm - 1) // bm) * bm
+
+
+def _col_tile(Cout: int, bn: int) -> int:
+    """0 → auto: 128 when it divides Cout, else one whole-Cout tile."""
+    if bn:
+        return bn
+    return 128 if Cout % 128 == 0 else Cout
+
+
+def spconv_os_fused(features: jax.Array, m: jax.Array, weights: jax.Array,
+                    *, impl: str = "auto", bm: int = 0, bn: int = 0,
+                    interpret: bool = False) -> jax.Array:
+    """OS dataflow, implicit-GEMM: in-kernel gather from HBM F_in, no
+    [M, Kd, Cin] intermediate. XLA fallback = gather + fused einsum."""
+    use_pallas, interp = resolve_backend(impl)
+    if not use_pallas:
+        gathered = features[jnp.clip(m, 0)]
+        return _ref.masked_group_gemm_ref(m, gathered, weights)
+    M = m.shape[0]
+    bm, Mp = _row_tile(M, bm)
+    bn = _col_tile(weights.shape[-1], bn)
+    if Mp != M:
+        m = jnp.pad(m, ((0, Mp - M), (0, 0)), constant_values=-1)
+    out = _os_pallas(features, m, weights, bm=bm, bn=bn,
+                     interpret=interpret or interp)
+    return out[:M] if Mp != M else out
+
+
+def spconv_ws_fused(features: jax.Array, m: jax.Array, weights: jax.Array,
+                    *, capacity: int, impl: str = "auto", bc: int = 0,
+                    bn: int = 0, interpret: bool = False) -> jax.Array:
+    """WS dataflow, fused compact+GEMM+merge. XLA fallback = the scan in
+    core.dataflow.weight_stationary (imported lazily to avoid a cycle)."""
+    use_pallas, interp = resolve_backend(impl)
+    if not use_pallas:
+        from repro.core.dataflow import weight_stationary
+        return weight_stationary(features, m, weights, capacity=capacity)
+    bn = _col_tile(weights.shape[-1], bn)
+    out = _ws_pallas(features, m, weights, capacity=capacity,
+                     bc=bc or 128, bn=bn, interpret=interpret or interp)
+    return out.astype(features.dtype)
 
 
 def output_stationary_fused(features: jax.Array, m: jax.Array,
                             weights: jax.Array, *, impl: str = "auto",
                             interpret: bool = False) -> jax.Array:
-    """OS dataflow: XLA gather + (Pallas|XLA) masked grouped GEMM."""
+    """Unfused OS reference: XLA gather + (Pallas|XLA) masked grouped GEMM.
+
+    Kept as the non-fused baseline — it still materializes the gathered
+    [M, Kd, Cin] tensor in HBM; the fused path is :func:`spconv_os_fused`.
+    """
     gathered = features[jnp.clip(m, 0)]                # [M, Kd, Cin]
-    if _use_pallas(impl):
+    if resolve_backend(impl)[0]:
         mc, kd, cin = gathered.shape
         bm = 128 if mc % 128 == 0 else (8 if mc % 8 == 0 else 1)
         cout = weights.shape[-1]
@@ -42,6 +111,6 @@ def output_stationary_fused(features: jax.Array, m: jax.Array,
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
               impl: str = "auto", interpret: bool = False) -> jax.Array:
     """(BH, S, D) attention; Pallas flash kernel on TPU, jnp reference off it."""
-    if _use_pallas(impl) and q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
+    if resolve_backend(impl)[0] and q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
         return _fa_pallas(q, k, v, causal=causal, interpret=interpret)
     return _ref.flash_attention_ref(q, k, v, causal=causal)

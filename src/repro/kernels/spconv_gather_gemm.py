@@ -1,0 +1,108 @@
+"""Fused implicit-GEMM output-stationary sparse convolution.
+
+This is the true TorchSparse/Minuet-style dataflow: the kernel-map gather
+happens *inside* the kernel, per tile, straight out of HBM-resident
+``F_in`` — the caller never materializes the ``[M, Kd, Cin]`` gathered
+intermediate that the unfused path (XLA gather + ``masked_group_gemm``)
+writes to and re-reads from HBM.
+
+  grid = (M/bm, Cout/bn, Kd)        — out tile revisited along the Kd axis
+  m block   (bm, 1)    SMEM         — int32 kernel-map column (DMA indices)
+  F_in      [N, Cin]   HBM (ANY)    — gathered row-by-row by async copy
+  w block   (1, Cin, bn) VMEM
+  out block (bm, bn)   VMEM         — fp32 scratch accumulator
+
+Per (tile, offset) the kernel walks the bm index scalars in SMEM and issues
+one row DMA per *valid* entry; invalid entries (m < 0) skip the HBM read
+entirely and zero the staging row in VMEM — the mask is applied in-register
+at gather time, never in memory. One MXU matmul per (offset, tile)
+accumulates into fp32 scratch, flushed on the last offset.
+
+HBM traffic vs the unfused path: the ``2·M·Kd·Cin`` intermediate bytes
+(write + re-read) disappear, and gather reads drop from ``M·Kd·Cin`` to
+``nnz·Cin`` (only valid kernel-map entries are fetched). See
+``core.dataflow.hbm_bytes_model`` for the accounting used by benchmarks.
+
+Alignment: choose bm a multiple of 8 (fp32 sublane) and bn ≤ Cout with
+Cout % bn == 0; ``kernels.ops.spconv_os_fused`` pads M and picks tiles so
+arbitrary shapes work. Production note: the per-row DMAs are issued from a
+sequential loop — a double-buffered variant would overlap them with the
+MXU; on the CPU interpreter this is moot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(m_ref, f_hbm, w_ref, o_ref, acc_ref, g_ref, sem, *, n_k, n_in, bm):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def gather(r, carry):
+        idx = m_ref[r, 0]
+
+        @pl.when(idx >= 0)
+        def _fetch():
+            row = jnp.clip(idx, 0, n_in - 1)
+            cp = pltpu.make_async_copy(
+                f_hbm.at[pl.ds(row, 1), :], g_ref.at[pl.ds(r, 1), :], sem)
+            cp.start()
+            cp.wait()
+
+        @pl.when(idx < 0)
+        def _blank():
+            g_ref[pl.ds(r, 1), :] = jnp.zeros_like(g_ref[pl.ds(r, 1), :])
+
+        return carry
+
+    jax.lax.fori_loop(0, bm, gather, 0)
+    acc_ref[...] += jnp.dot(g_ref[...], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def spconv_gather_gemm(
+    features: jax.Array,  # [N, Cin] HBM-resident input features
+    m: jax.Array,         # int32 [M, Kd] kernel-map column subset
+    weights: jax.Array,   # [Kd, Cin, Cout]
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[i] = Σ_k 1[m[i,k] ≥ 0] · F_in[m[i,k]] @ W[k], gather fused in."""
+    M, Kd = m.shape
+    N, Cin = features.shape
+    Cout = weights.shape[-1]
+    assert M % bm == 0 and Cout % bn == 0, (M, bm, Cout, bn)
+    grid = (M // bm, Cout // bn, Kd)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=Kd, n_in=N, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, k),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, Cin, bn), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, Cout), features.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, Cin), features.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(m, features, weights)

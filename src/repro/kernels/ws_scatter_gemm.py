@@ -1,0 +1,132 @@
+"""Fused weight-stationary sparse convolution: compact → GEMM → merge.
+
+The XLA ``weight_stationary`` scans offsets, and per offset materializes a
+``[capacity, Cin]`` gathered-feature buffer in HBM before its GEMM, then
+scatter-adds into the accumulator. This kernel fuses all three stages:
+
+  host side (cheap int32 XLA, no feature bytes): the per-offset compaction
+    *indices* — ``in_idx[k, c]`` (input row of the c-th valid pair of
+    offset k) and ``out_idx[k, c]`` (its output row) — via one vectorized
+    cumsum over the kernel-map validity mask. Pairs beyond ``capacity``
+    are dropped, exactly matching the XLA path's scatter-drop semantics.
+
+  kernel: grid (Cout/bn, Ks, capacity/bc), innermost-first iteration, so
+    for each output-channel tile the kernel sweeps every (offset, chunk)
+    sequentially — TPU grids are sequential, which is what makes the merge
+    deterministic without atomics. Per step it DMAs the chunk's valid
+    input rows from HBM-resident F_in into VMEM (empty slack slots skip
+    the DMA), runs one MXU matmul against the resident W[k] tile, and
+    merges each product row into the fp32 output block at its out_idx row
+    (rows are unique within an offset ⇒ plain read-modify-write).
+
+vs the XLA scan this removes the per-offset ``[capacity, Cin]`` HBM
+intermediate and the ``Ks`` scatter passes over the ``[M, Cout]``
+accumulator — the output block stays VMEM-resident across the whole sweep
+(VMEM bound: M·bn·4 bytes; pick bn accordingly for large M).
+
+Accumulation is fp32 throughout (the output is fp32, cast by the caller),
+matching the XLA path bit-for-bit on valid rows in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(in_idx_ref, out_idx_ref, f_hbm, w_ref, o_ref, g_ref, sem,
+            *, n_in, n_out, bc, bn):
+    k = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when((k == 0) & (c == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def gather(r, carry):
+        @pl.when(out_idx_ref[0, r] < n_out)   # slack slots: no HBM read
+        def _fetch():
+            row = jnp.clip(in_idx_ref[0, r], 0, n_in - 1)
+            cp = pltpu.make_async_copy(
+                f_hbm.at[pl.ds(row, 1), :], g_ref.at[pl.ds(r, 1), :], sem)
+            cp.start()
+            cp.wait()
+
+        return carry
+
+    jax.lax.fori_loop(0, bc, gather, 0)
+    part = jnp.dot(g_ref[...], w_ref[0],
+                   preferred_element_type=jnp.float32)       # (bc, bn)
+
+    def merge(r, carry):
+        orow = out_idx_ref[0, r]
+        safe = jnp.minimum(orow, n_out - 1)
+        row = jax.lax.dynamic_slice(part, (r, 0), (1, bn))
+        # slack slots (orow == n_out) carry uninitialized scratch — select,
+        # don't scale, so garbage NaNs can't leak through a 0 multiply.
+        row = jnp.where(orow < n_out, row, jnp.zeros_like(row))
+        o_ref[pl.ds(safe, 1), :] = o_ref[pl.ds(safe, 1), :] + row
+        return carry
+
+    jax.lax.fori_loop(0, bc, merge, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "bc", "bn", "interpret"))
+def ws_scatter_gemm(
+    features: jax.Array,  # [N, Cin] HBM-resident input features
+    m: jax.Array,         # int32 [M, Ks] kernel-map column subset
+    weights: jax.Array,   # [Ks, Cin, Cout]
+    *,
+    capacity: int,
+    bc: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """WS dataflow with static per-offset pair capacity, fully fused.
+
+    Valid pairs beyond ``capacity`` are dropped (identical to the XLA
+    path). Returns fp32 ``[M, Cout]`` — cast at the call site.
+    """
+    M, Ks = m.shape
+    N, Cin = features.shape
+    Cout = weights.shape[-1]
+    cap = ((capacity + bc - 1) // bc) * bc   # tables padded with slack
+    assert Cout % bn == 0, (Cout, bn)
+
+    # --- host-side compaction indices (int32 only; no feature movement) ---
+    valid = m >= 0
+    dest = jnp.where(valid, jnp.cumsum(valid, axis=0) - 1, capacity)
+    # overflow pairs keep dest >= capacity and fall off via mode="drop",
+    # matching weight_stationary's scatter-drop exactly.
+    dest = jnp.where(dest >= capacity, cap, dest)
+    kk = jnp.broadcast_to(jnp.arange(Ks, dtype=jnp.int32)[None, :], (M, Ks))
+    rows = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[:, None], (M, Ks))
+    in_idx = jnp.zeros((Ks, cap), jnp.int32).at[kk.T, dest.T].set(
+        jnp.clip(m, 0).T, mode="drop")
+    out_idx = jnp.full((Ks, cap), M, jnp.int32).at[kk.T, dest.T].set(
+        rows.T, mode="drop")
+
+    grid = (Cout // bn, Ks, cap // bc)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_in=N, n_out=M, bc=bc, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc), lambda j, k, c: (k, c),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bc), lambda j, k, c: (k, c),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, Cin, bn), lambda j, k, c: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((M, bn), lambda j, k, c: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((M, Cout), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bc, Cin), features.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(in_idx, out_idx, features, weights)
+    return out

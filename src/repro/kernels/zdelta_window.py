@@ -43,7 +43,7 @@ def _kernel(starts_ref,            # scalar-prefetch int32 [n_tiles, K2]
             ovf_ref,               # out: (1, 1) int32 overflow counter
             win_ref,               # scratch VMEM (W,)
             sem,                   # DMA semaphore
-            *, zstep, K, W, n):
+            *, zstep, K, W, n, pad):
     t = pl.program_id(0)
     g = pl.program_id(1)
     start = jnp.clip(starts_ref[t, g], 0, n - W)
@@ -51,7 +51,11 @@ def _kernel(starts_ref,            # scalar-prefetch int32 [n_tiles, K2]
     cp.start()
     cp.wait()
     win = win_ref[...]                                   # (W,) sorted slice
-    q0 = out_block_ref[0, :] + anchors_ref[g]            # (bm,) anchor queries
+    rows = out_block_ref[0, :]
+    q0 = rows + anchors_ref[g]                           # (bm,) anchor queries
+    # PAD sentinel rows are masked to -1 by the caller regardless; their
+    # (wrapped / near-int-max) queries must not trip the overflow counter.
+    real = rows != pad
     last_val = win[W - 1]
     ovf = jnp.zeros((), jnp.int32)
     for r in range(K):
@@ -62,7 +66,7 @@ def _kernel(starts_ref,            # scalar-prefetch int32 [n_tiles, K2]
         m_ref[:, 0, r] = jnp.where(hit, idx, -1)
         # a query above the window's last element may match beyond the DMA'd
         # slice — count so the host can fall back for this tile.
-        ovf += ((q > last_val) & (start + W < n)).sum().astype(jnp.int32)
+        ovf += ((q > last_val) & (start + W < n) & real).sum().astype(jnp.int32)
     ovf_ref[0, 0] = ovf
 
 
@@ -107,7 +111,8 @@ def zdelta_window_search(
         scratch_shapes=[pltpu.VMEM((W,), arr.dtype), pltpu.SemaphoreType.DMA],
     )
     m3, ovf = pl.pallas_call(
-        functools.partial(_kernel, zstep=int(zstep), K=K, W=W, n=n),
+        functools.partial(_kernel, zstep=int(zstep), K=K, W=W, n=n,
+                          pad=pad_value(arr.dtype)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((mcap, k2, K), jnp.int32),

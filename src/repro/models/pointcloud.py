@@ -34,47 +34,49 @@ class PointCloudNet:
 
 
 def _res_stage(name: str, c_in: int, c_out: int, m: int, n_blocks: int,
-               K: int = 3, dataflow: str = "os", t: int = 0) -> List[SpConvSpec]:
+               K: int = 3, dataflow: str = "os", t: int = 0,
+               backend: str = "auto") -> List[SpConvSpec]:
     """Downsample conv (except stage 0) + n_blocks residual submanifold pairs."""
     specs: List[SpConvSpec] = []
     if m > 0:
         specs.append(SpConvSpec(f"{name}_down", c_in, c_out, K=3,
-                                m_in=m - 1, m_out=m, dataflow=dataflow))
+                                m_in=m - 1, m_out=m, dataflow=dataflow,
+                                backend=backend))
         c_in = c_out
     for b in range(n_blocks):
         specs.append(SpConvSpec(f"{name}_b{b}a", c_in, c_out, K=K, m_in=m,
-                                m_out=m, dataflow=dataflow, t=t))
+                                m_out=m, dataflow=dataflow, t=t, backend=backend))
         specs.append(SpConvSpec(f"{name}_b{b}b", c_out, c_out, K=K, m_in=m,
-                                m_out=m, dataflow=dataflow, t=t))
+                                m_out=m, dataflow=dataflow, t=t, backend=backend))
         c_in = c_out
     return specs
 
 
 def sparse_resnet21(in_channels: int = 4, n_classes: int = 20,
                     width: Sequence[int] = (16, 32, 64, 128),
-                    dataflow: str = "os") -> PointCloudNet:
+                    dataflow: str = "os", backend: str = "auto") -> PointCloudNet:
     """21 SpC layers: stem + 4 stages × (down + 2 res-pairs)... matching the
     paper's ResN layer count."""
     specs: List[SpConvSpec] = [
         SpConvSpec("stem", in_channels, width[0], K=3, m_in=0, m_out=0,
-                   dataflow=dataflow)]
+                   dataflow=dataflow, backend=backend)]
     c = width[0]
     for s, w in enumerate(width):
         n_blocks = 1 if s < 2 else 1
         specs += _res_stage(f"s{s}", c, w, m=s, n_blocks=n_blocks,
-                            dataflow=dataflow)
+                            dataflow=dataflow, backend=backend)
         c = w
     # head convs to reach 21
     while len(specs) < 21:
         specs.append(SpConvSpec(f"head{len(specs)}", c, c, K=3,
                                 m_in=len(width) - 1, m_out=len(width) - 1,
-                                dataflow=dataflow))
+                                dataflow=dataflow, backend=backend))
     return PointCloudNet("sparse_resnet21", tuple(specs), in_channels, n_classes)
 
 
 def minkunet42(in_channels: int = 4, n_classes: int = 20,
                width: Sequence[int] = (32, 64, 128, 256),
-               dataflow: str = "os") -> PointCloudNet:
+               dataflow: str = "os", backend: str = "auto") -> PointCloudNet:
     # NB: the paper finds UNet favors weight-stationary **on GPU**; on TPU
     # (no atomics — WS merges via scatter) output-stationary wins by ~1000×
     # collective/memory terms in the pod-scale dry-run (§Perf SpC iter-1),
@@ -84,54 +86,55 @@ def minkunet42(in_channels: int = 4, n_classes: int = 20,
     submanifold pairs at each level — 42 SpC layers total."""
     specs: List[SpConvSpec] = [
         SpConvSpec("stem0", in_channels, width[0], K=3, m_in=0, m_out=0,
-                   dataflow=dataflow),
+                   dataflow=dataflow, backend=backend),
         SpConvSpec("stem1", width[0], width[0], K=3, m_in=0, m_out=0,
-                   dataflow=dataflow)]
+                   dataflow=dataflow, backend=backend)]
     c = width[0]
     for s, w in enumerate(width):  # encoder: 4 × (down + 2 sub) = 12
         specs.append(SpConvSpec(f"enc{s}_down", c, w, K=3, m_in=s, m_out=s + 1,
-                                dataflow=dataflow))
+                                dataflow=dataflow, backend=backend))
         specs.append(SpConvSpec(f"enc{s}_a", w, w, K=3, m_in=s + 1, m_out=s + 1,
-                                dataflow=dataflow))
+                                dataflow=dataflow, backend=backend))
         specs.append(SpConvSpec(f"enc{s}_b", w, w, K=3, m_in=s + 1, m_out=s + 1,
-                                dataflow=dataflow))
+                                dataflow=dataflow, backend=backend))
         c = w
     dec_width = (128, 96, 96, 96)
     for s in range(4):             # decoder: 4 × (up + skip-merge sub ×2)
         lvl = 4 - s - 1
         w = dec_width[s]
         specs.append(SpConvSpec(f"dec{s}_up", c, w, K=3, m_in=lvl + 1,
-                                m_out=lvl, dataflow=dataflow))
+                                m_out=lvl, dataflow=dataflow, backend=backend))
         skip_c = width[lvl - 1] if lvl > 0 else width[0]
         specs.append(SpConvSpec(f"dec{s}_a", w + skip_c, w, K=3, m_in=lvl,
-                                m_out=lvl, dataflow=dataflow))
+                                m_out=lvl, dataflow=dataflow, backend=backend))
         specs.append(SpConvSpec(f"dec{s}_b", w, w, K=3, m_in=lvl, m_out=lvl,
-                                dataflow=dataflow))
+                                dataflow=dataflow, backend=backend))
         c = w
     # extra submanifold pairs to reach 42 layers (paper count)
     i = 0
     while len(specs) < 42:
         specs.append(SpConvSpec(f"tail{i}", c, c, K=3, m_in=0, m_out=0,
-                                dataflow=dataflow))
+                                dataflow=dataflow, backend=backend))
         i += 1
     return PointCloudNet("minkunet42", tuple(specs), in_channels, n_classes)
 
 
 def centerpoint_large(in_channels: int = 5, n_classes: int = 10,
                       width: Sequence[int] = (16, 32, 32, 64),
-                      dataflow: str = "hybrid", t: int = 3) -> PointCloudNet:
+                      dataflow: str = "hybrid", t: int = 3,
+                      backend: str = "auto") -> PointCloudNet:
     """CenterPoint-Large (ResNL): K=5 submanifold layers in all stages."""
     specs: List[SpConvSpec] = [
         SpConvSpec("stem", in_channels, width[0], K=5, m_in=0, m_out=0,
-                   dataflow=dataflow, t=t)]
+                   dataflow=dataflow, t=t, backend=backend)]
     c = width[0]
     for s, w in enumerate(width):
         specs += _res_stage(f"s{s}", c, w, m=s, n_blocks=1, K=5,
-                            dataflow=dataflow, t=t)
+                            dataflow=dataflow, t=t, backend=backend)
         c = w
     while len(specs) < 20:
         specs.append(SpConvSpec(f"head{len(specs)}", c, c, K=5, m_in=3,
-                                m_out=3, dataflow=dataflow, t=t))
+                                m_out=3, dataflow=dataflow, t=t, backend=backend))
     return PointCloudNet("centerpoint_large", tuple(specs), in_channels,
                          n_classes)
 
@@ -178,7 +181,6 @@ def pointcloud_forward(params: dict, net: PointCloudNet, plan,
     """
     skips: Dict[int, jax.Array] = {}
     x = features
-    level = 0
     for spec in net.specs:
         kmap = plan.kmaps[spec.name]
         if spec.name.startswith("dec") and spec.name.endswith("_a"):
@@ -191,5 +193,4 @@ def pointcloud_forward(params: dict, net: PointCloudNet, plan,
             skips[spec.m_out] = x
         if spec.name.startswith("stem"):
             skips[0] = x
-        level = spec.m_out
     return x @ params["head"].astype(x.dtype)
