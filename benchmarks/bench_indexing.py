@@ -1,0 +1,149 @@
+"""Indexing trajectory bench: map-construction latency per engine plus a
+sort/search/DMA work breakdown, persisted to BENCH_indexing.json so the
+perf history accumulates across PRs (mirror of BENCH_dataflow.json).
+
+Engines measured on a small 3-layer net (submanifold K3, downsample K3,
+submanifold K5 — the shape mix real nets use):
+
+* ``zdelta``            — XLA search, default downsample ("auto": merge on
+                          TPU, sort fallback off-TPU)
+* ``zdelta_merge``      — XLA search, single-sort merge downsample forced
+                          (the TPU plan pipeline, timed wherever we run)
+* ``zdelta_resort``     — XLA search, sort-per-level downsample (pre-PR-2)
+* ``zdelta_sym``        — §5.4 half-search + mirror fill on submanifold
+                          layers (tuner-gated in production: the mirror
+                          scatter loses on CPU XLA, wins where scatter is
+                          cheap — both sides recorded here)
+* ``zdelta_pallas``     — superwindow kernel (1 DMA/tile; interpreter off-TPU)
+* ``zdelta_pallas_window`` — PR-1 per-group kernel (K² DMAs/tile)
+* ``bsearch`` / ``hash``   — the paper's baselines
+
+Off-TPU the Pallas rows time the interpreter (relative algorithmic cost
+only — see benchmarks/common.py); the work counters (sorts per plan, search
+count, DMA count/bytes) are host-independent and are the quantities the
+acceptance criteria track: exactly one full sort per plan, one window DMA
+per output tile.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SpConvSpec, build_network_plan, plan_levels,
+                        symmetry_anchor_count)
+from repro.data import scenes as sc_mod
+from .common import emit, scene_set, timeit, us
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "BENCH_indexing.json")
+
+# pallas interpreter rows are slow off-TPU; keep them to the smallest scene
+PALLAS_SCENES = 1
+
+
+def _specs(symmetry=False):
+    return (
+        SpConvSpec("l0_sub3", 4, 8, K=3, m_in=0, m_out=0, symmetry=symmetry),
+        SpConvSpec("l1_down", 8, 16, K=3, m_in=0, m_out=1, symmetry=symmetry),
+        SpConvSpec("l2_sub5", 16, 16, K=5, m_in=1, m_out=1, symmetry=symmetry),
+    )
+
+
+def _work_model(specs, mcaps, bm=128):
+    """Host-independent work counters per engine variant."""
+    levels = plan_levels(specs)
+    n_down = len([m for m in levels if m > 0])
+    searches = {"full": 0, "sym": 0}
+    dma = {"window": 0, "superwindow": 0}
+    for s in specs:
+        mcap = mcaps[s.m_out]
+        n_tiles = (mcap + bm - 1) // bm
+        g_full, g_sym = s.K ** 2, symmetry_anchor_count(s.K)
+        searches["full"] += mcap * g_full
+        searches["sym"] += mcap * (g_sym if s.submanifold else g_full)
+        dma["window"] += n_tiles * g_full
+        dma["superwindow"] += n_tiles
+    return {
+        "sorts_per_plan": {"merge": 1, "resort": 1 + n_down},
+        "anchor_searches": searches,
+        "window_dmas": dma,
+    }
+
+
+def run():
+    rows, records = [], []
+    for si, (name, sc) in enumerate(scene_set()):
+        packed = jnp.asarray(sc_mod.pack_scene(sc))
+        variants = [
+            ("zdelta", dict(engine="zdelta")),
+            ("zdelta_merge", dict(engine="zdelta",
+                                  downsample_method="merge")),
+            ("zdelta_resort", dict(engine="zdelta",
+                                   downsample_method="sort")),
+            ("zdelta_sym", dict(engine="zdelta", symmetry=True)),
+            ("bsearch", dict(engine="bsearch")),
+            ("hash", dict(engine="hash")),
+        ]
+        if si < PALLAS_SCENES:
+            variants += [
+                ("zdelta_pallas", dict(engine="zdelta_pallas")),
+                ("zdelta_pallas_window",
+                 dict(engine="zdelta_pallas_window")),
+            ]
+        timings = {}
+        mcaps = None
+        for vname, kw in variants:
+            kw = dict(kw)
+            specs = _specs(symmetry=kw.pop("symmetry", False))
+            fn = jax.jit(lambda p, kw=kw, specs=specs: build_network_plan(
+                p, specs=specs, layout=sc.layout, **kw))
+            dt = timeit(fn, packed, repeats=3, warmup=1)
+            timings[vname] = dt
+            if mcaps is None:
+                plan = fn(packed)
+                mcaps = {m: plan.coords[m].capacity for m in plan.coords}
+        work = _work_model(_specs(), mcaps)
+        for vname, dt in timings.items():
+            derived = []
+            if vname == "zdelta_merge":
+                derived.append(f"speedup_vs_resort="
+                               f"{timings['zdelta_resort'] / dt:.2f}")
+            if vname == "zdelta_sym":
+                derived.append(f"speedup_vs_full="
+                               f"{timings['zdelta'] / dt:.2f}")
+            if vname == "zdelta_pallas" and "zdelta_pallas_window" in timings:
+                derived.append(
+                    "dma_per_plan="
+                    f"{work['window_dmas']['superwindow']}"
+                    f";dma_per_plan_window={work['window_dmas']['window']}")
+            rows.append((f"indexing/{name}/{vname}", us(dt),
+                         ";".join(derived)))
+        records.append({
+            "scene": name,
+            "timings_us": {k: us(v) for k, v in timings.items()},
+            "work": work,
+        })
+
+    rec = {
+        "host_backend": jax.default_backend(),
+        "note": ("pallas rows run the interpreter off-TPU; work counters "
+                 "(sorts/searches/DMAs) are the device-independent claims"),
+        "scenes": records,
+    }
+    hist = []
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            hist = json.load(f)
+            if not isinstance(hist, list):
+                hist = [hist]
+    hist.append(rec)
+    with open(RESULTS, "w") as f:
+        json.dump(hist, f, indent=1)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -8,7 +8,7 @@ pipelines, vs one XLA call per kernel for sequential."""
 import jax
 import jax.numpy as jnp
 
-from repro.core import build_network_plan, sequential_plan_fns
+from repro.core import build_network_plan, plan_levels, sequential_plan_fns
 from repro.data import scenes as sc_mod
 from repro.models import pointcloud as pc
 from .common import emit, timeit, us
@@ -21,8 +21,15 @@ def run():
     for net in (pc.sparse_resnet21(), pc.minkunet42(),
                 pc.centerpoint_large(in_channels=4)):
         specs = net.conv_specs()
+        # default plan engine ("auto" downsample: merge on TPU, sort here)
         fused = jax.jit(lambda r: build_network_plan(r, specs=specs,
                                                      layout=sc.layout))
+        # the TPU plan pipeline, forced: exactly one sort per plan
+        fused_merge = jax.jit(lambda r: build_network_plan(
+            r, specs=specs, layout=sc.layout, downsample_method="merge"))
+        # pre-PR-2 fused plan: one full sort per stride level
+        fused_resort = jax.jit(lambda r: build_network_plan(
+            r, specs=specs, layout=sc.layout, downsample_method="sort"))
         sort_fn, level_fns, map_fns = sequential_plan_fns(specs, sc.layout)
 
         def sequential(raw):
@@ -33,9 +40,16 @@ def run():
                     for s in specs]
 
         t_f = timeit(fused, packed, repeats=3)
+        t_m = timeit(fused_merge, packed, repeats=3)
+        t_r = timeit(fused_resort, packed, repeats=3)
         t_s = timeit(sequential, packed, repeats=3)
+        n_down = len([m for m in plan_levels(specs) if m > 0])
         rows.append((f"fig12/{net.name}/networkwide", us(t_f),
                      f"speedup_vs_sequential={t_s / t_f:.2f}"))
+        rows.append((f"fig12/{net.name}/networkwide_merge", us(t_m),
+                     f"sorts=1;speedup_vs_resort={t_r / t_m:.2f}"))
+        rows.append((f"fig12/{net.name}/networkwide_resort", us(t_r),
+                     f"sorts={1 + n_down}"))
         rows.append((f"fig12/{net.name}/sequential", us(t_s), ""))
     emit(rows)
     return rows

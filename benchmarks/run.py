@@ -14,9 +14,9 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_dataflow, fig2_breakdown, fig3b_density, fig7_end2end,
-               fig8_layerwise, fig9_dataflow, fig10_mapping, fig11_ablation,
-               fig12_networkwide)
+from . import (bench_dataflow, bench_indexing, fig2_breakdown, fig3b_density,
+               fig7_end2end, fig8_layerwise, fig9_dataflow, fig10_mapping,
+               fig11_ablation, fig12_networkwide)
 
 ALL = {
     "fig2": fig2_breakdown.run,
@@ -28,6 +28,7 @@ ALL = {
     "fig11": fig11_ablation.run,
     "fig12": fig12_networkwide.run,
     "dataflow": bench_dataflow.run,
+    "indexing": bench_indexing.run,
 }
 
 

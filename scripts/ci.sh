@@ -21,6 +21,13 @@ python -m pytest -x -q \
   tests/test_dataflow_backends.py::test_zdelta_pallas_engine_matches_zdelta \
   "tests/test_kernels.py::test_zdelta_window_matches_xla[3-512]"
 
+# indexing smoke: superwindow kernel parity on a tiny scene (interpret mode)
+# + the single-sort merge downsample oracle check, so the PR-2 indexing
+# pipeline is exercised off-TPU on every run.
+python -m pytest -x -q \
+  tests/test_plan_pipeline.py::test_superwindow_tiny_scene_smoke \
+  tests/test_plan_pipeline.py::test_downsample_merge_tiny_count
+
 # the dataflow bench must stay runnable end-to-end (writes BENCH_dataflow.json)
 python -m benchmarks.run --backend pallas dataflow >/dev/null
 echo "ci.sh: OK"

@@ -1,11 +1,15 @@
 """Spira core: packed-native voxel indexing + adaptive-dataflow sparse conv."""
 from .packing import BitLayout, pack, pack_offsets, unpack, offset_grid, offset_l1
-from .voxel import CoordSet, build_coord_set, downsample, pad_value
-from .zdelta import zdelta_offsets, zdelta_search, simple_bsearch, symmetrize_kernel_map
+from .voxel import (CoordSet, build_coord_set, downsample, downsample_all,
+                    downsample_merge, pad_value, resolve_downsample_method)
+from .zdelta import (zdelta_offsets, zdelta_search, zdelta_search_symmetric,
+                     simple_bsearch, symmetrize_kernel_map,
+                     symmetry_anchor_count, expand_half_map)
 from .kernel_map import KernelMap, l1_partition, l1_norm_max, density_by_l1
 from .dataflow import output_stationary, weight_stationary, hybrid, hbm_bytes_model
 from .spconv import SpConvSpec, init_spconv, apply_spconv
 from .network_plan import NetworkPlan, build_network_plan, sequential_plan_fns, plan_levels
 from .tuner import (tune_threshold_measure, tune_threshold_cost_model,
                     candidate_ts, tune_layer_measure, tune_layer_cost_model,
-                    plan_window, apply_tuning, LayerTuneResult)
+                    plan_window, plan_superwindow, apply_tuning,
+                    LayerTuneResult)

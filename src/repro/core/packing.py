@@ -160,6 +160,20 @@ def downsample_mask(layout: BitLayout, m: int) -> int:
 
 
 def round_down(packed: jax.Array, layout: BitLayout, m: int) -> jax.Array:
+    """Apply :func:`downsample_mask`.
+
+    **Not order-preserving on packed words.** Rounding floors each field
+    independently, and the cleared bits sit in the *middle* of the word (low
+    bits of the x and y fields), so a sorted input does not stay sorted:
+    e.g. with m=1, packed (x=0, y=5, z=·) < (x=1, y=0, z=·) but rounds to
+    (0, 4, ·) > (0, 0, ·). What *does* survive is run structure: restricted
+    to inputs that agree on the cleared x-bits and cleared y-bits (the "run
+    residue"), rounding is monotone — two such words first differ at an
+    uncleared bit position, and flooring never reorders there. A sorted
+    array therefore splits into 4^m interleaved sorted runs keyed by
+    (x mod 2^m, y mod 2^m); ``voxel.downsample`` exploits exactly this to
+    rebuild sortedness with a run merge instead of a fresh sort.
+    """
     if m == 0:
         return packed
     return packed & jnp.asarray(downsample_mask(layout, m), layout.dtype)

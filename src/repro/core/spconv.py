@@ -38,7 +38,14 @@ class SpConvSpec:
     backend: str = "auto"         # "auto" | "xla" | "pallas"
     bm: int = 0                   # row / WS-chunk tile (0 = auto)
     bn: int = 0                   # output-channel tile (0 = auto)
-    window: int = 0               # zdelta_pallas search window (0 = auto)
+    window: int = 0               # zdelta_pallas superwindow size (0 = auto;
+                                  # tuner's plan_superwindow sizes it exactly)
+    symmetry: bool = False        # §5.4 half-search + mirror fill — applied
+                                  # by plan building only when submanifold.
+                                  # Halves anchor searches but pays a
+                                  # ⌈K³/2⌉·M mirror scatter; the tuner
+                                  # measures which side wins per platform
+                                  # (scatter loses on CPU XLA, see tuner).
 
     @property
     def submanifold(self) -> bool:

@@ -10,9 +10,15 @@ persisted on the SpConvSpec via :func:`apply_tuning`):
 * ``t``        — hybrid dataflow threshold ∈ {0, s_p, …, L1NormMax+1}.
 * ``backend``  — "xla" vs "pallas" kernel family (core.dataflow module doc).
 * ``(bm, bn)`` — Pallas row/channel tile sizes (0 = dispatcher default).
-* ``W``        — zdelta_pallas search window; :func:`plan_window` computes
-                 the exact smallest overflow-free window from the sorted
+* ``W``        — zdelta_pallas search window; :func:`plan_window` (per-group
+                 windows, legacy kernel) and :func:`plan_superwindow` (one
+                 shared window per output tile, current kernel) compute the
+                 exact smallest overflow-free window from the sorted
                  coordinate arrays, so no measurement is needed for it.
+* ``symmetry`` — §5.4 submanifold half-search on/off. On TPU the half-
+                 search always does strictly less search work (½ the anchor
+                 groups) at the cost of ⌈K³/2⌉ mirror scatters, which the
+                 cost model prices; non-submanifold layers ignore it.
 
 Two modes:
 * ``measure``   — wall-clock the jitted layer on this host (honest on a real
@@ -36,6 +42,7 @@ import jax.numpy as jnp
 
 from .dataflow import hbm_bytes_model, hybrid
 from .kernel_map import KernelMap, l1_norm_max, l1_partition
+from .zdelta import symmetry_anchor_count, zdelta_search, zdelta_search_symmetric
 
 
 @dataclasses.dataclass
@@ -112,20 +119,25 @@ class LayerTuneResult:
     window: int
     per_config: dict   # (t, backend, bm, bn) -> seconds (or model cost)
     mode: str
+    # §5.4 half-search decision: None = not evaluated (apply_tuning then
+    # keeps the spec's setting); True/False = tuned choice.
+    symmetry: Optional[bool] = None
+    sym_times: Optional[Tuple[float, float]] = None  # (t_full, t_half), measure mode
 
 
-def plan_window(inputs, outputs, packed_anchors: jax.Array, zstep: int,
-                *, K: int, bm: int = 128) -> int:
-    """Exact smallest overflow-free zdelta_pallas window for this layer.
+def _plan_window_from_bounds(inputs, outputs, bm: int, span_fn) -> int:
+    """Shared body of :func:`plan_window` / :func:`plan_superwindow`.
 
-    Per (output tile, anchor group) the max *valid* query is
-    ``last_valid_row + anchor + (K−1)·zstep``. The kernel flags overflow
-    whenever a real query exceeds the window's last element, so the window
-    must reach the first array position ≥ that max query (or the array
-    end). PAD sentinel rows are excluded — the kernel ignores their
-    queries, and sizing off the int32-max tail would demand a near-whole-
-    array window. Host-side, two searchsorted calls — no kernel run.
-    """
+    Tiles the output rows exactly as ``network_plan._pallas_map`` does
+    (PAD-padded to a multiple of ``bm`` — a window sized for these tiles
+    also covers any finer tiling, since a sub-tile's query span is
+    contained in its tile's span), asks ``span_fn(first_row, last_valid_row)``
+    for each tile's (lo, hi) query bounds, and returns the smallest window
+    that contains an element ≥ every hi (so the kernels' ``q > last_val``
+    overflow test can't fire) — or runs to the array end, which disarms the
+    counter. PAD sentinel tiles are excluded: the kernels ignore their
+    queries, and sizing off the int-max tail would demand a near-whole-
+    array window. Host-side, two searchsorted calls — no kernel run."""
     from .voxel import pad_value
 
     arr = np.asarray(inputs.packed).astype(np.int64)
@@ -133,21 +145,72 @@ def plan_window(inputs, outputs, packed_anchors: jax.Array, zstep: int,
     outp = np.asarray(outputs.packed)
     pad = pad_value(outp.dtype)
     mcap = outp.shape[0]
-    bm = next(b for b in (bm, 64, 32, 16, 8, 4, 2, 1) if mcap % b == 0)
-    out2d = outp.reshape(mcap // bm, bm).astype(np.int64)
+    mcap2 = ((mcap + bm - 1) // bm) * bm
+    padded = np.full((mcap2,), pad, outp.dtype)
+    padded[:mcap] = outp
+    out2d = padded.reshape(mcap2 // bm, bm).astype(np.int64)
     valid_tile = out2d[:, 0] != pad        # pads sort last: tail tiles only
     if not valid_tile.any():
         return 1
     last = np.where(out2d != pad, out2d, np.int64(-(2 ** 62))).max(axis=1)
-    anchors = np.asarray(packed_anchors).astype(np.int64)
-    lo = out2d[:, :1] + anchors[None, :]
-    hi = last[:, None] + anchors[None, :] + (K - 1) * int(zstep)
+    lo, hi = span_fn(out2d[:, 0], last)
     start = np.searchsorted(arr, lo[valid_tile], side="left")
     first_ge = np.searchsorted(arr, hi[valid_tile], side="left")
-    # window must contain an element ≥ the max query (so `q > last_val`
-    # can't fire) — or run to the array end, which disarms the counter.
     need = np.where(first_ge < n, first_ge + 1, n) - start
     return max(1, min(int(need.max()), n))
+
+
+def plan_window(inputs, outputs, packed_anchors: jax.Array, zstep: int,
+                *, K: int, bm: int = 128) -> int:
+    """Exact smallest overflow-free window for the legacy per-group kernel
+    (``zdelta_window_search``): per (tile, anchor group), queries span
+    ``first_row + anchor`` to ``last_valid_row + anchor + (K−1)·zstep``."""
+    anchors = np.asarray(packed_anchors).astype(np.int64)
+
+    def span(first, last):
+        return (first[:, None] + anchors[None, :],
+                last[:, None] + anchors[None, :] + (K - 1) * int(zstep))
+
+    return _plan_window_from_bounds(inputs, outputs, bm, span)
+
+
+def plan_superwindow(inputs, outputs, packed_anchors: jax.Array, zstep: int,
+                     *, K: int, bm: int = 128) -> int:
+    """Exact smallest overflow-free *superwindow* — the one shared window
+    per output tile that ``zdelta_superwindow_search`` DMAs: from the
+    tile's smallest query (first row + smallest anchor) to its largest
+    (last valid row + largest anchor + (K−1)·zstep)."""
+    anchors = np.asarray(packed_anchors).astype(np.int64)
+
+    def span(first, last):
+        return (first + anchors[0],
+                last + anchors[-1] + (K - 1) * int(zstep))
+
+    return _plan_window_from_bounds(inputs, outputs, bm, span)
+
+
+def tune_symmetry_measure(coords, *, K: int, repeats: int = 3) -> tuple:
+    """Wall-clock the §5.4 half-search (+ mirror scatter) against the full
+    search for a submanifold layer. Returns (half_wins, t_full, t_half).
+
+    This is a genuine platform trade: the half-search saves
+    (K² − ⌈K²/2⌉−1)·M anchor searches but pays a ⌈K³/2⌉·M-element mirror
+    scatter. XLA lowers scatter element-sequentially on CPU (it loses
+    there); on TPU the balance shifts — hence measure, don't assume."""
+    inputs, outputs, anchors, zstep = coords
+
+    full = jax.jit(lambda ci, co: zdelta_search(ci, co, anchors, zstep, K=K))
+    half = jax.jit(lambda ci, co: zdelta_search_symmetric(ci, co, anchors,
+                                                          zstep, K=K))
+    times = []
+    for fn in (full, half):
+        fn(inputs, outputs).block_until_ready()
+        tic = time.perf_counter()
+        for _ in range(repeats):
+            fn(inputs, outputs).block_until_ready()
+        times.append((time.perf_counter() - tic) / repeats)
+    t_full, t_half = times
+    return t_half < t_full, t_full, t_half
 
 
 def tune_layer_measure(
@@ -162,9 +225,12 @@ def tune_layer_measure(
     tiles: Sequence[Tuple[int, int]] = ((0, 0),),
     repeats: int = 3,
     coords: Optional[tuple] = None,   # (inputs, outputs, anchors, zstep)
+    submanifold: bool = False,
 ) -> LayerTuneResult:
     """Joint wall-clock sweep over (t, backend, bm, bn); W planned exactly
-    from ``coords`` when given. Off-TPU, "pallas" times the interpreter —
+    from ``coords`` when given (superwindow sizing — the current plan
+    engine), and ``symmetry`` decided by :func:`tune_symmetry_measure` for
+    submanifold layers. Off-TPU, "pallas" times the interpreter —
     restrict ``backends`` to ("xla",) there unless the sweep itself is
     under test."""
     per = {}
@@ -181,9 +247,15 @@ def tune_layer_measure(
                     fn(features, kmap, weights).block_until_ready()
                 per[(t, backend, bm, bn)] = (time.perf_counter() - tic) / repeats
     t_best, backend, bm, bn = min(per, key=per.get)
-    window = plan_window(*coords, K=K) if coords else 0
+    window = plan_superwindow(*coords, K=K) if coords else 0
+    symmetry, sym_times = None, None
+    if submanifold and coords:
+        symmetry, t_full, t_half = tune_symmetry_measure(coords, K=K,
+                                                         repeats=repeats)
+        sym_times = (t_full, t_half)
     return LayerTuneResult(t_best=t_best, backend=backend, bm=bm, bn=bn,
-                           window=window, per_config=per, mode="measure")
+                           window=window, per_config=per, mode="measure",
+                           symmetry=symmetry, sym_times=sym_times)
 
 
 def tune_layer_cost_model(
@@ -199,10 +271,19 @@ def tune_layer_cost_model(
     # relative weight of one HBM byte vs one MAC (roofline ridge point,
     # calibrated once per platform).
     byte_cost_macs: float = 30.0,
+    submanifold: bool = False,
+    # relative cost of one mirror-scatter element vs one binary-search
+    # compare step (platform-calibrated; 8.0 reflects XLA's element-
+    # sequential CPU scatter, which keeps symmetry off there — TPU
+    # calibration is expected to drop it).
+    scatter_cost_steps: float = 8.0,
 ) -> LayerTuneResult:
     """Analytic joint (t, backend) choice: the MAC model of
     ``tune_threshold_cost_model`` plus the HBM-bytes model per backend.
     Tiles don't enter the cost model (returned as 0 = dispatcher default).
+    For submanifold layers the §5.4 half-search is chosen analytically:
+    it saves (K² − ⌈K²/2⌉−1)·M anchor searches of ~log2 N compare steps
+    each, against a ⌈K³/2⌉·M-element mirror scatter.
     """
     counts = np.asarray(kmap.column_counts()).astype(np.float64)
     n_out = float(kmap.out_count)
@@ -226,12 +307,20 @@ def tune_layer_cost_model(
                     capacity=int(counts.max()) if counts.size else mcap)["total"]
             per[(t, backend, 0, 0)] = macs + bts * byte_cost_macs / itemsize
     t_best, backend, bm, bn = min(per, key=per.get)
+    symmetry = None
+    if submanifold:
+        saved_steps = (K * K - symmetry_anchor_count(K)) * np.log2(max(2, mcap))
+        scatter_steps = (K ** 3 // 2) * scatter_cost_steps
+        symmetry = bool(saved_steps > scatter_steps)
     return LayerTuneResult(t_best=t_best, backend=backend, bm=bm, bn=bn,
-                           window=0, per_config=per, mode="cost_model")
+                           window=0, per_config=per, mode="cost_model",
+                           symmetry=symmetry)
 
 
 def apply_tuning(spec, result: LayerTuneResult):
     """Persist a tune result on a layer spec (returns a new SpConvSpec)."""
     return dataclasses.replace(
         spec, t=result.t_best, backend=result.backend, bm=result.bm,
-        bn=result.bn, window=result.window)
+        bn=result.bn, window=result.window,
+        symmetry=(spec.symmetry if result.symmetry is None
+                  else result.symmetry))

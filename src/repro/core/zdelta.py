@@ -2,10 +2,13 @@
 
 The paper's central algorithm, adapted to TPU vector semantics:
 
-* **No pre-processing.** Coordinates are already sorted (sortedness is
-  established once at network input and propagates through every layer —
-  see ``voxel.build_coord_set`` / ``downsample``). There is no hash table,
-  no tile index, nothing to build.
+* **No pre-processing.** Coordinates are already sorted: one true sort at
+  network input (``voxel.build_coord_set``), after which every downsampled
+  level *re-establishes* sortedness with a run-aware merge — ``round_down``
+  itself is **not** order-preserving on packed words (see
+  ``packing.round_down``), so sortedness does not propagate for free; it is
+  maintained cheaply (merge, not sort) by ``voxel.downsample``. There is no
+  hash table, no tile index, nothing to build.
 
 * **K² anchor searches instead of K³ full searches.** The K³ offsets are
   grouped into K² *z-delta groups* of K offsets sharing (dx, dy) with dz
@@ -26,8 +29,9 @@ The paper's central algorithm, adapted to TPU vector semantics:
 On GPU the win is fewer global-memory round trips; on TPU the anchor search
 is a vectorized ``searchsorted`` (log N gather-compare steps on the VPU) and
 the probe is a short unrolled sequence of *contiguous* gathers — the same
-complexity argument, restated for a vector machine. The Pallas variant
-(kernels/zdelta_search.py) additionally stages the probed region in VMEM.
+complexity argument, restated for a vector machine. The Pallas variants
+(kernels/zdelta_window.py) additionally stage the probed region in VMEM —
+the superwindow kernel with one shared DMA per output tile.
 """
 from __future__ import annotations
 
@@ -63,8 +67,11 @@ def zdelta_search(
 ) -> jax.Array:
     """Build the kernel map ``M[i, k] = j`` (or −1) in one shot.
 
-    Returns int32 [capacity(outputs), K^3] with columns in z-delta group
-    order (group g, member r → column g*K + r). Padded output rows are −1.
+    Returns int32 [capacity(outputs), G·K] where G = len(packed_anchors),
+    with columns in z-delta group order (group g, member r → column g*K+r).
+    G = K² for a full search; the §5.4 submanifold half-search passes the
+    first ``symmetry_anchor_count(K)`` anchors only. Padded output rows
+    are −1.
     """
     arr = inputs.packed                       # [N] sorted, PAD-tailed
     n = arr.shape[0]
@@ -84,8 +91,8 @@ def zdelta_search(
         cols.append(jnp.where(hit, cursor, -1))
         cursor = cursor + hit.astype(jnp.int32)
         query = query + zs
-    # [M, K^2, K] -> [M, K^3] in group order
-    m = jnp.stack(cols, axis=-1).reshape(outputs.packed.shape[0], K * K * K)
+    # [M, G, K] -> [M, G*K] in group order
+    m = jnp.stack(cols, axis=-1).reshape(outputs.packed.shape[0], -1)
     # Padded output rows (outputs.packed == PAD) produce garbage queries that
     # can never match (PAD + offset overflows past every real coordinate),
     # but mask explicitly for robustness.
@@ -120,24 +127,68 @@ def mirror_permutation(K: int) -> np.ndarray:
     return np.arange(K * K * K - 1, -1, -1)
 
 
+def symmetry_anchor_count(K: int) -> int:
+    """Number of z-delta anchor groups a submanifold half-search needs: the
+    searched columns are [0, ⌈K³/2⌉] (first half + the self-map center), and
+    column c lives in group c // K, so groups [0, K²//2] suffice — the last
+    of them only partially, its trailing (K−1)/2 member columns are computed
+    and discarded by :func:`expand_half_map`."""
+    return K * K // 2 + 1
+
+
+def zdelta_search_symmetric(inputs: CoordSet, outputs: CoordSet,
+                            packed_anchors: jax.Array, zstep, *,
+                            K: int) -> jax.Array:
+    """The full §5.4 submanifold half-search pipeline in one place (used by
+    plan building, the tuner and benchmarks so they all measure the same
+    algorithm): search the first :func:`symmetry_anchor_count` anchor
+    groups, then mirror-fill. ``packed_anchors`` is the full [K²] set;
+    output is the full [M, K³] map, bit-identical to :func:`zdelta_search`.
+    Valid only when inputs == outputs (submanifold)."""
+    g = symmetry_anchor_count(K)
+    m = zdelta_search(inputs, outputs, packed_anchors[:g], zstep, K=K)
+    return symmetrize_kernel_map(expand_half_map(m, K=K), K=K)
+
+
+def expand_half_map(m_partial: jax.Array, *, K: int) -> jax.Array:
+    """Zero-pad a half-search map [M, symmetry_anchor_count(K)·K] (columns in
+    group order, produced by searching only the first
+    ``symmetry_anchor_count(K)`` anchors) to the full [M, K³] layout with −1
+    in every mirrored column, ready for :func:`symmetrize_kernel_map`."""
+    k3 = K * K * K
+    half = k3 // 2
+    mcap = m_partial.shape[0]
+    out = jnp.full((mcap, k3), -1, jnp.int32)
+    return out.at[:, : half + 1].set(m_partial[:, : half + 1])
+
+
 @partial(jax.jit, static_argnames=("K",))
-def symmetrize_kernel_map(m_half: jax.Array, outputs_count: jax.Array, *, K: int) -> jax.Array:
+def symmetrize_kernel_map(m_half: jax.Array, *, K: int) -> jax.Array:
     """Submanifold symmetry trick (Spira §5.4): given a kernel map whose
     columns are filled only for the first ⌈K³/2⌉ offsets, fill column
     ``mirror(k)`` via the identity  M[i, k] = j  ⇒  M[j, mirror(k)] = i.
+    Count-independent: PAD rows carry no valid entries in the searched
+    columns, so the scatter never touches them.
 
     Halves *search* work on TPU (the storage-layout motivation on GPU does
     not transfer; see DESIGN.md §2). Valid only when outputs == inputs.
+    Wired into plan building: ``build_network_plan`` applies it to every
+    submanifold layer whose spec has ``symmetry=True`` (searching only
+    :func:`symmetry_anchor_count` anchor groups), for both the XLA and the
+    superwindow-Pallas engines.
     """
     k3 = K * K * K
     half = k3 // 2  # columns [0, half) searched; center column half is self-map
-    rows = jnp.arange(m_half.shape[0], dtype=jnp.int32)
-    out = m_half
-    mirror = k3 - 1  # mirror(c) = k3 - 1 - c
-    for c in range(half):
-        j = m_half[:, c]
-        valid = j >= 0
-        out = out.at[jnp.where(valid, j, m_half.shape[0]), mirror - c].set(
-            jnp.where(valid, rows, -1), mode="drop"
-        )
-    return out
+    mcap = m_half.shape[0]
+    rows = jnp.arange(mcap, dtype=jnp.int32)
+    # One flat scatter for all half columns at once: entry (i, c) with
+    # M[i, c] = j >= 0 writes i at flat position j*k3 + mirror(c). Targets
+    # are collision-free (j determines i for fixed c), invalid entries are
+    # routed out of bounds and dropped.
+    j = m_half[:, :half]
+    mirror_cols = jnp.arange(k3 - 1, k3 - 1 - half, -1, dtype=jnp.int32)
+    flat = jnp.where(j >= 0, j * k3 + mirror_cols[None, :], mcap * k3)
+    vals = jnp.broadcast_to(rows[:, None], (mcap, half))
+    out = m_half.reshape(-1).at[flat.reshape(-1)].set(
+        vals.reshape(-1), mode="drop")
+    return out.reshape(mcap, k3)

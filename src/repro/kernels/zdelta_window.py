@@ -1,26 +1,41 @@
-"""Hierarchical z-delta search kernel — TPU-native form of Spira §5.2.
+"""Hierarchical z-delta search kernels — TPU-native forms of Spira §5.2.
 
 The GPU algorithm's locality story (anchor binary search + ≤K−1 contiguous
-probes staying in cache lines) is restaged for the TPU memory hierarchy:
+probes staying in cache lines) is restaged for the TPU memory hierarchy.
+Two generations live here:
+
+``zdelta_window_search`` (per-group windows, the PR-1 kernel, kept as the
+DMA-count baseline for ``benchmarks/bench_indexing``):
 
   Phase A (XLA, cheap): per (output tile, anchor group), one `searchsorted`
-    for the tile's *first* anchor query gives the HBM window start. Because
-    outputs are sorted and offsets constant, all bm·K queries of the tile ×
-    group land in a bounded window after that start (geometric continuity →
-    windows are narrow in practice; measured in benchmarks/fig10).
+    for the tile's *first* anchor query gives the HBM window start.
+  Phase B (Pallas): grid (n_tiles, K²) — K² independent window DMAs per
+    output tile, each group's bm×K queries resolved against its window with
+    a (bm, W) broadcast-compare per member: O(bm·W) compares.
 
-  Phase B (Pallas): grid (n_tiles, K²). The sorted input slice
-    ``arr[start : start + W]`` is DMA'd into VMEM (dynamic start from the
-    scalar-prefetched starts table), and all bm×K queries of the tile
-    resolve against it with vectorized equality search — a (bm, W)
-    broadcast-compare per group member on the VPU, no per-lane pointer
-    chasing. Matches beyond the static window are reported via an overflow
-    counter so the caller can fall back to the XLA path for those tiles
-    (none in practice for W ≥ 4·bm on surface scenes).
+``zdelta_superwindow_search`` (the current engine):
 
-So: binary-search count drops |Vq|·K³ → n_tiles·K² (Phase A), and the probe
-works on VMEM-resident contiguous data (Phase B) — the same two wins the
-paper claims, expressed with DMA + vector compares instead of cache lines.
+  Phase A (XLA): ONE `searchsorted` per output tile — the window base is the
+    insertion point of the tile's smallest query (first row + smallest
+    anchor). All G anchor groups of the tile share it.
+  Phase B (Pallas): grid (n_tiles,) — ONE superwindow DMA per output tile
+    covering every anchor group (SpOctA-style shared staging across
+    neighbor offsets). Per-group offsets are resolved *inside* VMEM: a
+    batched branchless binary search finds all (bm, G) anchor lower bounds
+    in log2(SW) gather-compare steps, then the K−1 remaining members of
+    each group reuse the z-delta two-pointer: the cursor advances only on a
+    hit (sound by the Integer Property, see core/zdelta.py), so each member
+    costs one gather-compare instead of a (bm, W) broadcast. Compares drop
+    from O(bm·W) per (group, member) to O(bm·(log SW + K)) per group.
+
+Both report matches beyond the static window via overflow counters so the
+caller can fall back to the XLA path for those tiles (none in practice once
+the tuner's ``plan_superwindow`` sizes SW exactly).
+
+So vs the paper: binary-search count drops |Vq|·K³ → |Vq|·K² (batched in
+Phase B), HBM round trips drop K²× (one DMA per tile), and the probe works
+on VMEM-resident contiguous data — the paper's two wins plus the shared
+staging win, expressed with DMA + vector compares instead of cache lines.
 """
 from __future__ import annotations
 
@@ -122,6 +137,120 @@ def zdelta_window_search(
     )(starts, packed_anchors, out2d, arr)
 
     m = m3.reshape(mcap, K * K * K)
+    pad = pad_value(arr.dtype)
+    m = jnp.where((outputs.packed != pad)[:, None], m, -1)
+    return m, ovf
+
+
+# ---------------------------------------------------------------------------
+# superwindow kernel: one DMA per output tile, all anchor groups share it
+# ---------------------------------------------------------------------------
+
+def _super_kernel(starts_ref,           # scalar-prefetch int32 [n_tiles]
+                  out_block_ref,        # (1, bm) packed outputs (VMEM)
+                  anchors_ref,          # (G,) packed anchors (VMEM)
+                  arr_hbm,              # full sorted input array (ANY/HBM)
+                  m_ref,                # out: (bm, G, K) int32
+                  ovf_ref,              # out: (1, G) int32 overflow counters
+                  win_ref,              # scratch VMEM (SW,)
+                  sem,                  # DMA semaphore
+                  *, zstep, K, G, SW, n, pad, nbits):
+    t = pl.program_id(0)
+    base = jnp.clip(starts_ref[t], 0, n - SW)
+    cp = pltpu.make_async_copy(arr_hbm.at[pl.ds(base, SW)], win_ref, sem)
+    cp.start()
+    cp.wait()
+    win = win_ref[...]                                   # (SW,) sorted slice
+    rows = out_block_ref[0, :]                           # (bm,)
+    real = (rows != pad)[:, None]                        # (bm, 1)
+    q = rows[:, None] + anchors_ref[...][None, :]        # (bm, G) anchors
+    # Batched branchless binary search: pos = |{w in win : w < q}| for all
+    # (bm, G) anchor queries at once — log2(SW) gather+compare rounds,
+    # instead of a (bm, SW) broadcast-compare per query.
+    pos = jnp.zeros(q.shape, jnp.int32)
+    for sbit in reversed(range(nbits)):
+        cand = pos + (1 << sbit)
+        vals = win[jnp.clip(cand - 1, 0, SW - 1)]
+        pos = jnp.where((cand <= SW) & (vals < q), cand, pos)
+    # Two-pointer member resolve: the Integer Property guarantees no packed
+    # value lies strictly between consecutive member queries q + r·zstep and
+    # q + (r+1)·zstep, so the cursor advances only on a hit.
+    last_val = win[SW - 1]
+    ovf = jnp.zeros((1, G), jnp.int32)
+    cursor = pos
+    zs = jnp.asarray(zstep, q.dtype)
+    for r in range(K):
+        cand = win[jnp.clip(cursor, 0, SW - 1)]
+        hit = (cand == q) & (cursor < SW) & real
+        m_ref[:, :, r] = jnp.where(hit, cursor + base, -1)
+        ovf += ((q > last_val) & real).sum(axis=0, dtype=jnp.int32)[None, :]
+        cursor = cursor + hit.astype(jnp.int32)
+        q = q + zs
+    # a window running to the array end cannot miss matches past its edge.
+    ovf_ref[...] = jnp.where(base + SW < n, ovf, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("zstep", "K", "W", "bm", "interpret"))
+def zdelta_superwindow_search(
+    inputs: CoordSet,
+    outputs: CoordSet,
+    packed_anchors: jax.Array,   # [G] — K² for a full search, ⌈K²/2⌉+… for
+                                 # the §5.4 half-search (any ascending subset)
+    zstep: int,
+    *,
+    K: int,
+    W: int = 2048,
+    bm: int = 128,
+    interpret: bool = False,
+):
+    """Returns (kernel map [M, G·K], overflow counts [n_tiles, G]).
+
+    One superwindow DMA per output tile (vs K² in
+    :func:`zdelta_window_search`); columns follow the order of
+    ``packed_anchors`` (group g, member r → column g·K + r).
+    """
+    arr = inputs.packed
+    n = arr.shape[0]
+    mcap = outputs.packed.shape[0]
+    G = packed_anchors.shape[0]
+    assert mcap % bm == 0, (mcap, bm)
+    assert n >= W, f"input capacity {n} must be >= superwindow {W}"
+    n_tiles = mcap // bm
+    nbits = max(1, int(np.ceil(np.log2(W))))
+
+    # Phase A: one searchsorted per tile. Anchors ascend (offset_grid is
+    # row-major lex), so the tile's smallest query is row 0 + anchors[0] and
+    # every query of the tile has its lower bound at or after this base.
+    out2d = outputs.packed.reshape(n_tiles, bm)
+    starts = jnp.searchsorted(
+        arr, out2d[:, 0] + packed_anchors[0], side="left").astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda t, *_: (t, 0)),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, G, K), lambda t, *_: (t, 0, 0)),
+            pl.BlockSpec((1, G), lambda t, *_: (t, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((W,), arr.dtype), pltpu.SemaphoreType.DMA],
+    )
+    m3, ovf = pl.pallas_call(
+        functools.partial(_super_kernel, zstep=int(zstep), K=K, G=G, SW=W,
+                          n=n, pad=pad_value(arr.dtype), nbits=nbits),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((mcap, G, K), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, G), jnp.int32),
+        ],
+        interpret=interpret,
+    )(starts, out2d, packed_anchors, arr)
+
+    m = m3.reshape(mcap, G * K)
     pad = pad_value(arr.dtype)
     m = jnp.where((outputs.packed != pad)[:, None], m, -1)
     return m, ovf

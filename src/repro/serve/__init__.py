@@ -1,1 +1,2 @@
 from .engine import ServeEngine, Request
+from .bucketing import BucketedPlanner, bucket_capacity, bucket_packed

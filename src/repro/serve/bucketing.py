@@ -1,0 +1,100 @@
+"""Capacity bucketing for serving traffic (north-star: sustained inference).
+
+``build_network_plan`` is jitted with static array shapes, so every distinct
+raw-point-count would trigger a fresh XLA compile — fatal under live traffic
+where scene sizes vary per request. The fix is the standard serving trick
+(same philosophy as the LM engine's fixed slot/cache shapes): round the raw
+point count *up* to a power-of-two bucket, pad with the PAD sentinel, and
+let every request in a bucket reuse one compiled plan builder.
+
+PAD-padding is free for correctness: ``build_coord_set`` drops PAD before
+dedup, and every downstream operator understands the (sorted prefix + PAD
+tail) CoordSet contract — a bucketed plan is bit-identical to the unbucketed
+plan on the first ``count`` rows; only capacities (and therefore kernel-map
+row counts) grow to the bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network_plan import NetworkPlan, build_network_plan
+from repro.core.packing import BitLayout
+from repro.core.spconv import SpConvSpec
+from repro.core.voxel import pad_value
+
+
+def bucket_capacity(n: int, *, min_bucket: int = 1024,
+                    max_bucket: int | None = None) -> int:
+    """Smallest power-of-two bucket holding ``n`` points (≥ ``min_bucket``).
+
+    Power-of-two buckets keep the number of distinct compiled plans at
+    log2(max_scene / min_bucket) ≈ a dozen for realistic traffic, and every
+    bucket capacity is a multiple of 128 (min_bucket ≥ 128), which lets the
+    Pallas engines pick full 128-row tiles.
+    """
+    assert min_bucket >= 128 and min_bucket & (min_bucket - 1) == 0, min_bucket
+    cap = min_bucket
+    while cap < n:
+        cap <<= 1
+    if max_bucket is not None and cap > max_bucket:
+        raise ValueError(f"{n} points exceed max bucket {max_bucket}")
+    return cap
+
+
+def bucket_packed(packed_raw, *, min_bucket: int = 1024) -> jax.Array:
+    """Pad raw packed coordinates to their capacity bucket with PAD."""
+    p = np.asarray(packed_raw)
+    cap = bucket_capacity(p.shape[0], min_bucket=min_bucket)
+    out = np.full((cap,), pad_value(p.dtype), p.dtype)
+    out[: p.shape[0]] = p
+    return jnp.asarray(out)
+
+
+@dataclasses.dataclass
+class BucketedPlanner:
+    """Plan builder for serving: one compiled XLA module per capacity bucket.
+
+    >>> planner = BucketedPlanner(specs=specs, layout=layout)
+    >>> plan = planner.plan(packed_raw)          # any length
+    >>> planner.compile_count                    # == #distinct buckets seen
+    """
+
+    specs: Tuple[SpConvSpec, ...]
+    layout: BitLayout
+    engine: str = "zdelta"
+    downsample_method: str = "auto"
+    min_bucket: int = 1024
+
+    def __post_init__(self):
+        self._fn = jax.jit(
+            lambda p: build_network_plan(
+                p, specs=self.specs, layout=self.layout, engine=self.engine,
+                downsample_method=self.downsample_method))
+        self._buckets_seen: Dict[int, int] = {}
+
+    def plan(self, packed_raw) -> NetworkPlan:
+        padded = bucket_packed(packed_raw, min_bucket=self.min_bucket)
+        cap = padded.shape[0]
+        self._buckets_seen[cap] = self._buckets_seen.get(cap, 0) + 1
+        return self._fn(padded)
+
+    @property
+    def compile_count(self) -> int:
+        """Number of XLA compiles so far — one per distinct bucket.
+
+        Prefers jit's own cache size (catches accidental recompiles beyond
+        shape changes); falls back to the distinct-bucket count if that
+        private accessor disappears in a future JAX."""
+        cache_size = getattr(self._fn, "_cache_size", None)
+        if cache_size is not None:
+            return int(cache_size())
+        return len(self._buckets_seen)
+
+    @property
+    def bucket_hits(self) -> Dict[int, int]:
+        return dict(self._buckets_seen)

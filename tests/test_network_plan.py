@@ -88,7 +88,7 @@ def test_symmetry_trick_matches_full_search():
     full = np.asarray(zdelta_search(cs, cs, anchors, zstep, K=K))
     half = full.copy()
     half[:, K ** 3 // 2 + 1:] = -1  # keep only first half + center
-    sym = np.asarray(symmetrize_kernel_map(jnp.asarray(half), cs.count, K=K))
+    sym = np.asarray(symmetrize_kernel_map(jnp.asarray(half), K=K))
     np.testing.assert_array_equal(sym, full)
 
 

@@ -1,0 +1,250 @@
+"""PR-2 indexing-pipeline parity suite.
+
+Everything here asserts **bit-identity** against the simplest oracle:
+
+* merge-based downsample  vs  ``jnp.sort``-based ``build_coord_set``
+* superwindow Pallas search  vs  XLA ``zdelta_search``
+* symmetry-aware (half-search) plans  vs  full-search plans
+* bucketed serving plans  vs  one compile per bucket
+
+across K ∈ {3, 5}, strides {1, 2}, submanifold + downsampling layers, and
+PAD-heavy (low-count) coordinate sets.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (SpConvSpec, build_network_plan, downsample_all,
+                        plan_superwindow, symmetry_anchor_count,
+                        zdelta_offsets, zdelta_search)
+from repro.core.voxel import build_coord_set, downsample, pad_value
+from repro.data import scenes
+from repro.kernels.zdelta_window import zdelta_superwindow_search
+from repro.serve.bucketing import BucketedPlanner, bucket_capacity
+
+
+def _coord_set(scene, pad_factor=1.0):
+    raw = scenes.pack_scene(scene)
+    cap = ((int(raw.shape[0] * pad_factor) + 127) // 128) * 128
+    return build_coord_set(scenes.pack_scene(scene, capacity=cap))
+
+
+# ---------------------------------------------------------------------------
+# merge-based downsample vs sort-based oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pad_factor", [1.0, 3.0])   # 3.0: PAD-heavy tail
+@pytest.mark.parametrize("m", [1, 2, 3])
+def test_downsample_merge_bitmatch(m, pad_factor):
+    for mk, sc in [("indoor", scenes.indoor_scene(31, room=(64, 48, 24))),
+                   ("outdoor", scenes.outdoor_scene(31, extent=(160, 160, 24),
+                                                    n_objects=6)),
+                   ("random", scenes.random_scene(31, 2500))]:
+        cs = _coord_set(sc, pad_factor)
+        got = downsample(cs, sc.layout, m, method="merge")
+        want = downsample(cs, sc.layout, m, method="sort")
+        np.testing.assert_array_equal(np.asarray(got.packed),
+                                      np.asarray(want.packed), err_msg=mk)
+        assert int(got.count) == int(want.count)
+
+
+def test_downsample_merge_tiny_count():
+    """Degenerate low-count set: 3 real coordinates in a 512 buffer."""
+    sc = scenes.indoor_scene(32, room=(48, 40, 20))
+    raw = np.asarray(scenes.pack_scene(sc))[:3]
+    buf = np.full((512,), pad_value(raw.dtype), raw.dtype)
+    buf[:3] = raw
+    cs = build_coord_set(jnp.asarray(np.sort(buf)))
+    for m in (1, 2):
+        got = downsample(cs, sc.layout, m, method="merge")
+        want = downsample(cs, sc.layout, m, method="sort")
+        np.testing.assert_array_equal(np.asarray(got.packed),
+                                      np.asarray(want.packed))
+
+
+@pytest.mark.parametrize("levels", [(0, 1, 2), (0, 2), (1, 3), (2, 0, 1)])
+def test_downsample_all_chained_bitmatch(levels):
+    """The chained multi-level helper (one true sort at V0, per-level run
+    merges) matches per-level sort-from-V0, including non-contiguous and
+    unsorted level tuples."""
+    sc = scenes.indoor_scene(33, room=(64, 48, 24))
+    cs = _coord_set(sc, 2.0)
+    got = downsample_all(cs, sc.layout, levels)
+    for lv, g in zip(levels, got):
+        want = cs if lv == 0 else downsample(cs, sc.layout, lv, method="sort")
+        np.testing.assert_array_equal(np.asarray(g.packed),
+                                      np.asarray(want.packed), err_msg=str(lv))
+
+
+# ---------------------------------------------------------------------------
+# superwindow kernel vs XLA zdelta search
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,layer", [(3, "sub"), (5, "sub"),
+                                     (3, "down"), (3, "sub_s2"), (5, "down")])
+def test_superwindow_full_coverage_bitmatch(K, layer):
+    """With W = full array the superwindow kernel must be exact everywhere:
+    submanifold layers (offset stride 1), downsampling layers (fine-side
+    stride 1), and coarse submanifold layers (offset stride 2)."""
+    sc = scenes.indoor_scene(34, room=(56, 48, 24))
+    cs = _coord_set(sc)
+    if layer == "sub":
+        ci, co, stride = cs, cs, 1
+    elif layer == "down":                     # m_in=0 -> m_out=1
+        ci, co, stride = cs, downsample(cs, sc.layout, 1), 1
+    else:                                     # submanifold at level 1
+        c1 = downsample(cs, sc.layout, 1)
+        ci, co, stride = c1, c1, 2
+    _, anchors, zstep = zdelta_offsets(K, stride, sc.layout)
+    want = np.asarray(zdelta_search(ci, co, anchors, zstep, K=K))
+    got, ovf = zdelta_superwindow_search(ci, co, anchors, zstep, K=K,
+                                         W=ci.capacity, interpret=True)
+    assert int(np.asarray(ovf).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_superwindow_partial_anchor_subset():
+    """The kernel is generic over the anchor-group count G — the §5.4
+    half-search passes only symmetry_anchor_count(K) groups."""
+    K = 3
+    sc = scenes.indoor_scene(35, room=(48, 40, 20))
+    cs = _coord_set(sc)
+    _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+    sub = anchors[: symmetry_anchor_count(K)]
+    want = np.asarray(zdelta_search(cs, cs, sub, zstep, K=K))
+    got, ovf = zdelta_superwindow_search(cs, cs, sub, zstep, K=K,
+                                         W=cs.capacity, interpret=True)
+    assert int(np.asarray(ovf).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert got.shape[1] == symmetry_anchor_count(K) * K
+
+
+def test_plan_superwindow_is_overflow_free():
+    sc = scenes.indoor_scene(36, room=(56, 48, 24))
+    cs = _coord_set(sc)
+    _, anchors, zstep = zdelta_offsets(3, 1, sc.layout)
+    W = plan_superwindow(cs, cs, anchors, zstep, K=3)
+    _, ovf = zdelta_superwindow_search(cs, cs, anchors, zstep, K=3,
+                                       W=min(W, cs.capacity), interpret=True)
+    assert int(np.asarray(ovf).sum()) == 0
+
+
+def test_superwindow_tiny_scene_smoke():
+    """CI smoke (scripts/ci.sh): superwindow parity on a tiny scene —
+    exercises the Pallas path off-TPU in seconds."""
+    sc = scenes.indoor_scene(37, room=(28, 24, 16))
+    cs = _coord_set(sc)
+    _, anchors, zstep = zdelta_offsets(3, 1, sc.layout)
+    want = np.asarray(zdelta_search(cs, cs, anchors, zstep, K=3))
+    got, ovf = zdelta_superwindow_search(cs, cs, anchors, zstep, K=3,
+                                         W=cs.capacity, interpret=True)
+    assert int(np.asarray(ovf).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# symmetry-aware plan building
+# ---------------------------------------------------------------------------
+
+def _sym_specs(symmetry: bool):
+    return (
+        SpConvSpec("l0_sub3", 4, 8, K=3, m_in=0, m_out=0, symmetry=symmetry),
+        SpConvSpec("l1_down", 8, 16, K=3, m_in=0, m_out=1, symmetry=symmetry),
+        SpConvSpec("l2_sub5", 16, 16, K=5, m_in=1, m_out=1, symmetry=symmetry),
+        SpConvSpec("l3_sub3", 16, 16, K=3, m_in=1, m_out=1, symmetry=symmetry),
+    )
+
+
+@pytest.mark.parametrize("engine", ["zdelta", "zdelta_pallas"])
+def test_symmetry_plan_bitmatch(engine):
+    """Half-search + mirror fill must be bit-identical to the full search
+    for every layer (submanifold layers use it; downsampling layers must be
+    untouched by the knob) in both the XLA and superwindow engines."""
+    sc = scenes.indoor_scene(38, room=(56, 48, 24))
+    packed = scenes.pack_scene(sc)
+    full = build_network_plan(packed, specs=_sym_specs(False),
+                              layout=sc.layout, engine="zdelta")
+    got = build_network_plan(packed, specs=_sym_specs(True),
+                             layout=sc.layout, engine=engine)
+    for name in full.kmaps:
+        np.testing.assert_array_equal(np.asarray(full.kmaps[name].m),
+                                      np.asarray(got.kmaps[name].m),
+                                      err_msg=f"{engine}/{name}")
+
+
+def test_pallas_window_engine_kept_bitmatch():
+    """PR 1's per-group-window kernel stays available as an engine and stays
+    exact (it is the DMA-count baseline in benchmarks/bench_indexing)."""
+    sc = scenes.indoor_scene(39, room=(48, 40, 20))
+    packed = scenes.pack_scene(sc)
+    specs = (_sym_specs(True)[0],)
+    ref = build_network_plan(packed, specs=specs, layout=sc.layout,
+                             engine="zdelta")
+    got = build_network_plan(packed, specs=specs, layout=sc.layout,
+                             engine="zdelta_pallas_window")
+    np.testing.assert_array_equal(np.asarray(ref.kmaps["l0_sub3"].m),
+                                  np.asarray(got.kmaps["l0_sub3"].m))
+
+
+def test_downsample_method_knob_plan_bitmatch():
+    sc = scenes.indoor_scene(40, room=(48, 40, 20))
+    packed = scenes.pack_scene(sc)
+    specs = _sym_specs(True)[:2]
+    a = build_network_plan(packed, specs=specs, layout=sc.layout,
+                           downsample_method="merge")
+    b = build_network_plan(packed, specs=specs, layout=sc.layout,
+                           downsample_method="sort")
+    for m in a.coords:
+        np.testing.assert_array_equal(np.asarray(a.coords[m].packed),
+                                      np.asarray(b.coords[m].packed))
+    for name in a.kmaps:
+        np.testing.assert_array_equal(np.asarray(a.kmaps[name].m),
+                                      np.asarray(b.kmaps[name].m))
+
+
+# ---------------------------------------------------------------------------
+# capacity bucketing for serving traffic
+# ---------------------------------------------------------------------------
+
+def test_bucket_capacity_rounding():
+    assert bucket_capacity(1) == 1024
+    assert bucket_capacity(1024) == 1024
+    assert bucket_capacity(1025) == 2048
+    assert bucket_capacity(40_000) == 65_536
+    with pytest.raises(ValueError):
+        bucket_capacity(5000, max_bucket=4096)
+
+
+def test_bucketed_planner_compile_count():
+    """Varying scene sizes inside one bucket must reuse ONE compiled plan;
+    a size crossing the bucket boundary compiles exactly one more."""
+    sc = scenes.indoor_scene(41, room=(64, 48, 24))
+    raw = np.asarray(scenes.pack_scene(sc))
+    planner = BucketedPlanner(specs=_sym_specs(True)[:2], layout=sc.layout,
+                              min_bucket=1024)
+    sizes_same_bucket = [1500, 1700, 2000]          # all bucket to 2048
+    for n in sizes_same_bucket:
+        plan = planner.plan(raw[:n])
+        assert plan.coords[0].capacity == 2048
+    assert planner.compile_count == 1
+    planner.plan(raw[:2500])                         # bucket 4096 -> compile
+    assert planner.compile_count == 2
+    assert planner.bucket_hits == {2048: 3, 4096: 1}
+
+
+def test_bucketed_plan_matches_unbucketed_prefix():
+    """Bucketing only grows capacities: kernel-map rows for real outputs are
+    bit-identical to the unbucketed plan."""
+    sc = scenes.indoor_scene(42, room=(48, 40, 20))
+    raw = np.asarray(scenes.pack_scene(sc))
+    n = (raw.shape[0] // 128) * 128              # any size; keep tiles even
+    spec = SpConvSpec("l", 4, 8, K=3, m_in=0, m_out=0)
+    planner = BucketedPlanner(specs=(spec,), layout=sc.layout)
+    bucketed = planner.plan(raw[:n])
+    direct = build_network_plan(jnp.asarray(raw[:n]), specs=(spec,),
+                                layout=sc.layout)
+    got = np.asarray(bucketed.kmaps["l"].m)
+    want = np.asarray(direct.kmaps["l"].m)
+    np.testing.assert_array_equal(got[: want.shape[0]], want)
+    assert int(bucketed.kmaps["l"].out_count) == int(direct.kmaps["l"].out_count)
