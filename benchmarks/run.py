@@ -14,9 +14,9 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_dataflow, bench_indexing, fig2_breakdown, fig3b_density,
-               fig7_end2end, fig8_layerwise, fig9_dataflow, fig10_mapping,
-               fig11_ablation, fig12_networkwide)
+from . import (bench_dataflow, bench_e2e, bench_indexing, fig2_breakdown,
+               fig3b_density, fig7_end2end, fig8_layerwise, fig9_dataflow,
+               fig10_mapping, fig11_ablation, fig12_networkwide)
 
 ALL = {
     "fig2": fig2_breakdown.run,
@@ -29,6 +29,7 @@ ALL = {
     "fig12": fig12_networkwide.run,
     "dataflow": bench_dataflow.run,
     "indexing": bench_indexing.run,
+    "e2e": bench_e2e.run,
 }
 
 

@@ -1,55 +1,81 @@
-"""End-to-end point-cloud inference: MinkUNet-42 on the Spira engine.
+"""End-to-end point-cloud inference through the session front door.
 
-Demonstrates network-wide voxel indexing (all 42 layers' coordinate sets +
-kernel maps built in ONE jitted graph at network start — Spira §5.5) and
-compares the three indexing engines end-to-end.
+One call builds the compiled pipeline (spec resolution, capacity bucketing,
+network-wide indexing — Spira §5.5 — and the feature pass, fused into one
+jitted graph); one call per request runs it:
 
-Run:  PYTHONPATH=src python examples/pointcloud_inference.py
+    session = compile_network(net, layout, batch=4)
+    logits  = session(SparseTensor.from_point_clouds(clouds, session.layout))
+
+Demonstrates single-scene and batch-of-B inference on MinkUNet-42, verifies
+the batched-vs-looped bit-identity contract, and prints steady-state latency
+per scene.
+
+Run:  PYTHONPATH=src python examples/pointcloud_inference.py [--smoke]
 """
+import argparse
 import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import build_network_plan
+from repro.core import SparseTensor
 from repro.data import scenes
 from repro.models import pointcloud as pc
+from repro.serve import compile_network
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true",
+                help="tiny scenes / batch-of-2 for CI")
+ap.add_argument("--engine", default="zdelta",
+                choices=["zdelta", "zdelta_pallas", "bsearch", "hash"])
+args = ap.parse_args()
+
+B = 2 if args.smoke else 4
+kind, extent = (("indoor", (48, 40, 24)) if args.smoke
+                else ("outdoor", (192, 192, 32)))
 
 net = pc.minkunet42(in_channels=4, n_classes=20)
-scene = scenes.outdoor_scene(seed=0, extent=(512, 512, 40))
-packed = jnp.asarray(scenes.pack_scene(scene))
-n = len(scene.coords)
-print(f"MinkUNet-42 on outdoor scene: {n} voxels")
+batch = scenes.scene_batch(seed=0, batch=B, kind=kind, extent=extent,
+                           overlap=0.5)
+rng = np.random.default_rng(1)
+clouds = [(sc.coords, rng.normal(size=(len(sc.coords), 4)).astype(np.float32))
+          for sc in batch]
+sizes = [len(c) for c, _ in clouds]
+print(f"MinkUNet-42, {B} {kind} scenes: {sizes} voxels, engine={args.engine}")
 
-params = pc.init_pointcloud(jax.random.key(0), net)
-feats = jnp.zeros((packed.shape[0], 4)).at[:n].set(
-    jax.random.normal(jax.random.key(1), (n, 4)))
-
-
-@jax.jit
-def infer(raw, f):
-    # network-wide indexing: one module, all layers' kernel maps
-    plan = build_network_plan(raw, specs=net.conv_specs(), layout=scene.layout)
-    return pc.pointcloud_forward(params, net, plan, f)
+session = compile_network(net, batch[0].layout, batch=B, engine=args.engine)
+print(session)
 
 
-out = infer(packed, feats)
-jax.block_until_ready(out)
-t0 = time.perf_counter()
-out = infer(packed, feats)
-jax.block_until_ready(out)
-dt = time.perf_counter() - t0
-print(f"logits {out.shape}, finite={bool(np.isfinite(np.asarray(out)).all())}")
-print(f"steady-state end-to-end: {dt * 1e3:.1f} ms on {jax.devices()[0].platform}")
+def timed(st):
+    out = session(st)                      # warm (compile for this bucket)
+    jax.block_until_ready(out.features)
+    t0 = time.perf_counter()
+    out = session(st)
+    jax.block_until_ready(out.features)
+    return out, time.perf_counter() - t0
 
-for engine in ("bsearch", "hash"):
-    @jax.jit
-    def infer_e(raw, f, engine=engine):
-        plan = build_network_plan(raw, specs=net.conv_specs(),
-                                  layout=scene.layout, engine=engine)
-        return pc.pointcloud_forward(params, net, plan, f)
 
-    ref = infer_e(packed, feats)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
-    print(f"engine '{engine}' produces identical outputs ✓")
+# -- single scene ----------------------------------------------------------
+st1 = SparseTensor.from_point_clouds(clouds[:1], session.layout)
+out1, dt1 = timed(st1)
+n1 = int(out1.count)
+print(f"single scene : logits {out1.features.shape} ({n1} valid rows), "
+      f"steady-state {dt1 * 1e3:.1f} ms")
+
+# -- batch of B ------------------------------------------------------------
+st_b = SparseTensor.from_point_clouds(clouds, session.layout)
+out_b, dt_b = timed(st_b)
+print(f"batch of {B}   : logits {out_b.features.shape} "
+      f"({int(out_b.count)} valid rows), steady-state {dt_b * 1e3:.1f} ms "
+      f"= {dt_b / B * 1e3:.1f} ms/scene")
+print(f"compiled buckets: {session.compile_count}")
+
+# -- batched == looped, bitwise -------------------------------------------
+scene0 = out_b.unbatch()[0]
+np.testing.assert_array_equal(np.asarray(scene0.features)[:n1],
+                              np.asarray(out1.unbatch()[0].features)[:n1])
+finite = bool(np.isfinite(np.asarray(out_b.features)[: int(out_b.count)]).all())
+print(f"batched scene-0 logits == single-scene logits (bitwise) ✓, "
+      f"finite={finite} on {jax.devices()[0].platform}")

@@ -1,0 +1,61 @@
+"""Point-cloud serving loop: request queue over one compiled session.
+
+Per-scene requests of *varying sizes* arrive, get packed into batched
+SparseTensors (scene index in the layout's batch bits), run through one
+SpiraSession call per batch, and are answered with per-scene logits on the
+scene's own voxels. Capacity bucketing inside the session keeps compiles at
+one per bucket no matter how sizes vary.
+
+Run:  PYTHONPATH=src python examples/pointcloud_serve.py [--smoke]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.data import scenes
+from repro.models import pointcloud as pc
+from repro.serve import PointCloudRequest, PointCloudServeEngine, compile_network
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true")
+args = ap.parse_args()
+
+B = 2 if args.smoke else 4
+n_req = 2 * B
+extent = (48, 40, 24) if args.smoke else (96, 80, 36)
+
+net = pc.sparse_resnet21(in_channels=4, n_classes=20)
+pool = scenes.scene_batch(seed=2, batch=n_req, kind="indoor", extent=extent,
+                          overlap=0.3)
+rng = np.random.default_rng(3)
+requests = []
+for i, sc in enumerate(pool):
+    # vary request sizes: drop a random fraction of each scene's voxels
+    keep = rng.random(len(sc.coords)) < rng.uniform(0.5, 1.0)
+    coords = sc.coords[keep]
+    requests.append(PointCloudRequest(
+        coords=coords,
+        features=rng.normal(size=(len(coords), 4)).astype(np.float32)))
+
+session = compile_network(net, pool[0].layout, batch=B)
+engine = PointCloudServeEngine(session)
+print(f"{session}\nserving {n_req} requests "
+      f"({[len(r.coords) for r in requests]} voxels) in batches of {B}")
+
+engine.run(requests)                      # warm: compiles per bucket
+for r in requests:
+    r.done, r.logits, r.voxels = False, None, None
+b0 = engine.batches_run
+t0 = time.perf_counter()
+engine.run(requests)
+dt = time.perf_counter() - t0
+
+assert all(r.done and np.isfinite(r.logits).all() for r in requests)
+print(f"steady state: {n_req} scenes in {engine.batches_run - b0} batches, "
+      f"{dt * 1e3:.1f} ms total = {dt / n_req * 1e3:.1f} ms/scene")
+print(f"compiled buckets: {session.compile_count} "
+      f"(requests sizes varied {min(len(r.coords) for r in requests)}–"
+      f"{max(len(r.coords) for r in requests)})")
+print(f"request 0 answer: logits {requests[0].logits.shape} on "
+      f"{requests[0].voxels.shape[0]} voxels ✓")

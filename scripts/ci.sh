@@ -28,6 +28,18 @@ python -m pytest -x -q \
   tests/test_plan_pipeline.py::test_superwindow_tiny_scene_smoke \
   tests/test_plan_pipeline.py::test_downsample_merge_tiny_count
 
+# session smoke: batched bit-identity + bucket-cache contract on tiny nets
+python -m pytest -x -q \
+  "tests/test_session.py::test_batched_bit_identity[2-3-zdelta]" \
+  tests/test_session.py::test_session_jit_cache_counts
+
+# example smoke: the session front door runs headless end to end
+python examples/pointcloud_inference.py --smoke >/dev/null
+python examples/pointcloud_serve.py --smoke >/dev/null
+
 # the dataflow bench must stay runnable end-to-end (writes BENCH_dataflow.json)
 python -m benchmarks.run --backend pallas dataflow >/dev/null
+
+# e2e bench: session vs hand-stitched latency record (writes BENCH_e2e.json)
+python -m benchmarks.bench_e2e --smoke >/dev/null
 echo "ci.sh: OK"

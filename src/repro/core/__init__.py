@@ -8,6 +8,7 @@ from .zdelta import (zdelta_offsets, zdelta_search, zdelta_search_symmetric,
 from .kernel_map import KernelMap, l1_partition, l1_norm_max, density_by_l1
 from .dataflow import output_stationary, weight_stationary, hybrid, hbm_bytes_model
 from .spconv import SpConvSpec, init_spconv, apply_spconv
+from .sparse_tensor import SparseTensor, ensure_sparse_tensor
 from .network_plan import NetworkPlan, build_network_plan, sequential_plan_fns, plan_levels
 from .tuner import (tune_threshold_measure, tune_threshold_cost_model,
                     candidate_ts, tune_layer_measure, tune_layer_cost_model,

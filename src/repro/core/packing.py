@@ -41,6 +41,12 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _batch_bits(batch: int) -> int:
+    """Batch-field width for ``batch`` scenes (0 = batch-free layout) — the
+    ONE sizing rule shared by ``BitLayout.for_extent`` and ``with_batch``."""
+    return 0 if batch <= 1 else max(1, int(np.ceil(np.log2(int(batch)))))
+
+
 @dataclasses.dataclass(frozen=True)
 class BitLayout:
     """Bit allocation (batch, x, y, z), most-significant field first.
@@ -95,9 +101,21 @@ class BitLayout:
         each side (see module docstring for the guard contract)."""
         assert guard & (guard - 1) == 0, "guard must be a power of two"
         need = lambda n: max(1, int(np.ceil(np.log2(max(2, int(n) + 2 * guard)))))
-        needb = lambda n: max(1, int(np.ceil(np.log2(max(2, int(n))))))
-        bb = 0 if batch <= 1 else needb(batch)
-        return cls(bx=need(ex), by=need(ey), bz=need(ez), bb=bb)
+        return cls(bx=need(ex), by=need(ey), bz=need(ez),
+                   bb=_batch_bits(batch))
+
+    def with_batch(self, batch: int) -> "BitLayout":
+        """Same x/y/z fields, batch field sized for ``batch`` scenes.
+
+        The batch field is the word's most-significant field and weight
+        offsets never carry a batch component, so everything proved for
+        single-scene packed words lifts to batched ones: sorted order is
+        batch-major (per-scene segments stay contiguous and sorted),
+        :func:`round_down` never clears batch bits (its run-structure lemma
+        is batch-oblivious), and the guard band keeps offset queries from
+        borrowing/carrying across the batch boundary (no cross-scene kernel-
+        map matches). ``batch <= 1`` returns a batch-free layout."""
+        return dataclasses.replace(self, bb=_batch_bits(batch))
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +191,12 @@ def round_down(packed: jax.Array, layout: BitLayout, m: int) -> jax.Array:
     array therefore splits into 4^m interleaved sorted runs keyed by
     (x mod 2^m, y mod 2^m); ``voxel.downsample`` exploits exactly this to
     rebuild sortedness with a run merge instead of a fresh sort.
+
+    Batch bits (``layout.bb > 0``) change nothing: they sit *above* x and
+    are never cleared, so they behave like any other uncleared high bit —
+    the run structure is still keyed by the cleared (x, y) residues alone,
+    and each run is itself batch-major. Batched multi-scene coordinate
+    streams therefore flow through the same merge pipeline unmodified.
     """
     if m == 0:
         return packed

@@ -1,0 +1,241 @@
+"""First-class sparse tensor: the engine's one data type from raw points in.
+
+A :class:`SparseTensor` carries everything a network call needs — features,
+packed voxel coordinates, the valid-row count and the :class:`BitLayout` that
+decodes the packing — as one pytree, so a compiled pipeline
+(``serve.session.SpiraSession``) can be called with a single argument and
+return the same shape of thing (logits on the same coordinates).
+
+Row contract (identical to ``voxel.CoordSet``, extended with features):
+
+* ``packed[: count]`` is strictly ascending, deduplicated; ``packed[count:]``
+  is PAD (int max). ``features[i]`` belongs to ``packed[i]``; feature rows in
+  the PAD tail are zero.
+* The constructors establish this invariant host-side (one sort + unique per
+  point cloud, the engine's one-time packing step); everything downstream is
+  jit-traced and never re-orders rows.
+
+Batching (the ``BitLayout.bb`` field, Spira §5.3 applied to scenes)
+-------------------------------------------------------------------
+:meth:`SparseTensor.from_point_clouds` folds B scenes into ONE coordinate
+set by writing the scene index into the most-significant ``bb`` bits of each
+packed word. Because the batch field sits *above* x/y/z:
+
+* **Sortedness is batch-major.** A batched sorted array is exactly the
+  concatenation of the per-scene sorted arrays in scene order — scene rows
+  are contiguous at every level, which is what lets per-scene masks fold
+  through BN statistics and the segmentation head.
+* **The round-down lemma survives.** ``packing.round_down`` clears low bits
+  of the x/y/z fields only; batch bits are untouched *uncleared high* bits,
+  so the ``4^Δ`` interleaved-sorted-run structure that the single-sort merge
+  downsample relies on holds per scene and globally (runs are still keyed by
+  the cleared (x, y) residues; the batch field only refines the order within
+  a run, never breaks it).
+* **Kernel maps can't cross scenes.** Weight offsets have no batch
+  component, and the guard-band contract (``packing`` module doc) keeps
+  every real x/y/z field value away from its field boundary, so a query
+  ``q + d`` can never carry into or borrow out of the batch field and
+  alias another scene's voxel.
+
+Together these mean ``build_network_plan`` runs on a batched word stream
+*unchanged* — one sort, one merge chain, one set of searches for B scenes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .packing import BitLayout, pack, unpack
+from .voxel import pad_value
+
+
+def _session_hint(got: str) -> str:
+    return (f"expected a SparseTensor, got {got}. Build one with "
+            "SparseTensor.from_point_cloud(coords, features, layout) or "
+            "SparseTensor.from_point_clouds([...]) and run it through a "
+            "compiled session: repro.serve.compile_network(net, layout)(st). "
+            "Raw packed arrays belong to the legacy core.build_network_plan "
+            "path only.")
+
+
+def ensure_sparse_tensor(x, *, where: str = "this API"):
+    """Raise an actionable TypeError unless ``x`` is a SparseTensor."""
+    if not isinstance(x, SparseTensor):
+        raise TypeError(f"{where}: {_session_hint(type(x).__name__)}")
+    return x
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseTensor:
+    """Features + packed coordinates + count + layout, as one pytree.
+
+    ``layout`` is static aux data (hashable frozen dataclass), so jit caches
+    specialize on it — a batched layout (``bb > 0``) and a single-scene
+    layout are different compilations, as they must be.
+    """
+
+    features: jax.Array   # [cap, C] rows aligned with ``packed``
+    packed: jax.Array     # [cap] sorted valid prefix, PAD tail
+    count: jax.Array      # int32 scalar — valid rows
+    layout: BitLayout
+
+    def tree_flatten(self):
+        return (self.features, self.packed, self.count), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        return cls(*children, layout=layout)
+
+    # -- shape facts ------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def channels(self) -> int:
+        return self.features.shape[-1]
+
+    @property
+    def num_scenes(self) -> int:
+        """Scene slots the layout can address (1 for single-scene)."""
+        return 1 << self.layout.bb
+
+    # -- constructors (host-side; the engine's one-time packing step) -----
+
+    @classmethod
+    def from_point_cloud(cls, coords, features, layout: BitLayout, *,
+                         capacity: Optional[int] = None,
+                         scene_id: int = 0) -> "SparseTensor":
+        """One scene: guard-biased integer voxel ``coords`` [N, 3] and
+        aligned ``features`` [N, C] → sorted, deduplicated SparseTensor.
+
+        Duplicate voxels keep the first occurrence's features. ``scene_id``
+        goes into the layout's batch field (only meaningful if
+        ``layout.bb > 0``)."""
+        coords = np.asarray(coords)
+        features = np.asarray(features)
+        if coords.ndim != 2 or coords.shape[-1] != 3:
+            raise ValueError(f"coords must be [N, 3] voxel ints, "
+                             f"got {coords.shape}")
+        if features.shape[0] != coords.shape[0]:
+            raise ValueError(f"features rows ({features.shape[0]}) must match "
+                             f"coords rows ({coords.shape[0]})")
+        if scene_id and not layout.bb:
+            raise ValueError(f"scene_id={scene_id} needs batch bits; use "
+                             "layout.with_batch(B) (bb is 0)")
+        b = (np.full(coords.shape[0], scene_id, np.int64)
+             if layout.bb else None)
+        p = np.asarray(pack(jnp.asarray(coords), layout,
+                            None if b is None else jnp.asarray(b)))
+        p, first = np.unique(p, return_index=True)
+        f = features[first]
+        n = p.shape[0]
+        cap = capacity or n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < {n} unique voxels")
+        pb = np.full((cap,), pad_value(p.dtype), p.dtype)
+        pb[:n] = p
+        fb = np.zeros((cap, features.shape[-1]), features.dtype)
+        fb[:n] = f
+        return cls(features=jnp.asarray(fb), packed=jnp.asarray(pb),
+                   count=jnp.asarray(n, jnp.int32), layout=layout)
+
+    @classmethod
+    def from_point_clouds(cls, clouds: Sequence[Tuple[np.ndarray, np.ndarray]],
+                          layout: BitLayout, *,
+                          capacity: Optional[int] = None) -> "SparseTensor":
+        """Pack B scenes — ``[(coords, features), ...]`` — into one batched
+        SparseTensor via the layout's batch bits (see module doc).
+
+        ``layout`` may be a single-scene layout (bb grows to fit B) or an
+        already-batched one (bb must fit B). Scene order is preserved:
+        scene i's rows are the i-th contiguous segment of the valid prefix.
+        """
+        B = len(clouds)
+        if B == 0:
+            raise ValueError("from_point_clouds needs at least one scene")
+        if (1 << layout.bb) < B:
+            layout = layout.with_batch(B)
+        parts = [cls.from_point_cloud(c, f, layout, scene_id=i)
+                 for i, (c, f) in enumerate(clouds)]
+        # Batch bits are most significant: the per-scene sorted arrays
+        # concatenate (in scene order) into one globally sorted array.
+        p = np.concatenate([np.asarray(s.packed) for s in parts])
+        f = np.concatenate([np.asarray(s.features) for s in parts])
+        n = p.shape[0]
+        cap = capacity or n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < {n} total voxels")
+        pb = np.full((cap,), pad_value(p.dtype), p.dtype)
+        pb[:n] = p
+        fb = np.zeros((cap, f.shape[-1]), f.dtype)
+        fb[:n] = f
+        return cls(features=jnp.asarray(fb), packed=jnp.asarray(pb),
+                   count=jnp.asarray(n, jnp.int32), layout=layout)
+
+    # -- padding / splitting ---------------------------------------------
+
+    def pad_to(self, capacity: int) -> "SparseTensor":
+        """Grow the buffer to ``capacity`` (PAD coords, zero features) — the
+        session's bucketing step. No-op if already that size."""
+        if capacity == self.capacity:
+            return self
+        if capacity < self.capacity:
+            raise ValueError(f"pad_to({capacity}) below current capacity "
+                             f"{self.capacity}")
+        extra = capacity - self.capacity
+        pb = jnp.concatenate([
+            self.packed,
+            jnp.full((extra,), pad_value(self.packed.dtype),
+                     self.packed.dtype)])
+        fb = jnp.concatenate([
+            self.features,
+            jnp.zeros((extra, self.channels), self.features.dtype)])
+        return SparseTensor(features=fb, packed=pb, count=self.count,
+                            layout=self.layout)
+
+    def scene_segments(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(starts, counts) of each scene's contiguous row segment, host-side.
+        Shape [num_scenes]; empty scene slots have count 0."""
+        S = self.num_scenes
+        p = np.asarray(self.packed)
+        n = int(self.count)
+        sid = (p[:n].astype(np.int64) >> self.layout.shift_b).astype(np.int64)
+        starts = np.searchsorted(sid, np.arange(S), side="left")
+        ends = np.searchsorted(sid, np.arange(S), side="right")
+        return starts.astype(np.int32), (ends - starts).astype(np.int32)
+
+    def unbatch(self) -> List["SparseTensor"]:
+        """Split a batched SparseTensor back into per-scene tensors (batch
+        bits cleared, single-scene layout). Inverse of
+        :meth:`from_point_clouds` up to empty trailing scene slots."""
+        base = dataclasses.replace(self.layout, bb=0)
+        starts, counts = self.scene_segments()
+        p = np.asarray(self.packed)
+        f = np.asarray(self.features)
+        bmask = (1 << self.layout.shift_b) - 1   # keep x/y/z fields only
+        np_dt = np.int32 if base.bits_total <= 31 else np.int64
+        out = []
+        for s, c in zip(starts, counts):
+            pp = (p[s: s + c].astype(np.int64) & bmask).astype(np_dt)
+            buf = np.full((max(int(c), 1),), pad_value(pp.dtype), pp.dtype)
+            buf[: c] = pp
+            fb = np.zeros((max(int(c), 1), self.channels), f.dtype)
+            fb[: c] = f[s: s + c]
+            out.append(SparseTensor(
+                features=jnp.asarray(fb), packed=jnp.asarray(buf),
+                count=jnp.asarray(int(c), jnp.int32), layout=base))
+        return out
+
+    def coords(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Unpacked (coords [count, 3], scene_ids [count]) of the valid
+        prefix, host-side (guard bias still applied — data-pipeline space)."""
+        n = int(self.count)
+        c, b = unpack(self.packed[:n], self.layout)
+        return np.asarray(c), np.asarray(b)

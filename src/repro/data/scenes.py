@@ -126,6 +126,48 @@ def random_scene(seed: int, n: int, extent: tuple = (128, 128, 64)) -> Scene:
                  extent=tuple(ext))
 
 
+def _make_scene(kind: str, seed: int, extent: tuple, **kw) -> Scene:
+    if kind == "indoor":
+        return indoor_scene(seed, room=extent, **kw)
+    if kind == "outdoor":
+        return outdoor_scene(seed, extent=extent, **kw)
+    if kind == "random":
+        return random_scene(seed, kw.pop("n", 2500), extent=extent)
+    raise ValueError(f"unknown scene kind {kind!r}")
+
+
+def scene_batch(seed: int = 0, batch: int = 4, kind: str = "indoor",
+                extent: tuple = (64, 48, 24), overlap: float = 0.5,
+                **kw) -> list:
+    """A batch of scenes over ONE shared extent/layout with *controlled
+    cross-scene overlap* — the multi-scene input the batched plan pipeline
+    wants to be tested against.
+
+    All-disjoint scene batches are toys: real batches (consecutive LiDAR
+    sweeps, rooms from one building) share most of their static geometry,
+    so batched kernel maps must handle heavy coordinate collision across
+    batch ids. Each scene here keeps an ``overlap`` fraction of a common
+    base scene's voxels and adds its own fresh geometry (seed + scene
+    index), so any pair of scenes shares roughly ``overlap²`` of the base.
+
+    ``overlap=0`` gives fully independent scenes; ``overlap=1`` makes every
+    scene a superset of the base. Single-scene generators
+    (:func:`indoor_scene` etc.) are unchanged — this composes them.
+    """
+    assert 0.0 <= overlap <= 1.0, overlap
+    rng = np.random.default_rng(seed)
+    base = _make_scene(kind, seed, extent, **kw)
+    out = []
+    for b in range(batch):
+        own = _make_scene(kind, seed + 101 + b, extent, **kw)
+        keep = rng.random(len(base.coords)) < overlap
+        coords = np.unique(np.concatenate([base.coords[keep], own.coords]),
+                           axis=0)
+        out.append(Scene(coords=coords.astype(np.int32), layout=base.layout,
+                         extent=base.extent))
+    return out
+
+
 def pack_scene(scene: Scene, capacity: int | None = None):
     """Pack (and pad to ``capacity``) scene coordinates → int array for
     ``build_coord_set``. This is the engine's one-time packing step."""

@@ -161,24 +161,145 @@ def init_pointcloud(key: jax.Array, net: PointCloudNet, dtype=jnp.float32) -> di
     return params
 
 
-def _relu_bn(x: jax.Array, count: jax.Array) -> jax.Array:
-    """ReLU + masked feature standardization (BN stand-in that respects the
-    valid-row prefix)."""
-    mask = (jnp.arange(x.shape[0]) < count)[:, None]
+def _rowsum(x: jax.Array) -> jax.Array:
+    """Column sums as a ``[1, N] @ [N, C]`` matmul — the only reduction we
+    found whose result is **bitwise zero-extension invariant** in practice.
+
+    The batched-vs-looped bit-identity contract needs: padding the buffer
+    with zero rows (a larger capacity bucket) must not change the sum by
+    even one ulp. ``jnp.sum`` regroups operands when the extent changes.
+    Hand-built elementwise reduction trees (halving adds, adjacent-pair
+    reshapes, with or without optimization_barriers) are mathematically
+    invariant but NOT in practice: embedded in a large jitted graph, XLA CPU
+    re-codegens the add chain per shape (fusion recomputation + FMA
+    contraction) and results drift by an ulp between capacity buckets —
+    observed and bisected on MinkUNet-42. A dot is a library call with
+    materialized operands and fixed k-panel blocking: the shared row prefix
+    is grouped identically at any N, and zero rows only append exact ``+0``
+    panel contributions. It is also the TPU-native choice (reductions ride
+    the MXU)."""
+    return jnp.dot(jnp.ones((1, x.shape[0]), x.dtype), x,
+                   preferred_element_type=jnp.float32)[0].astype(x.dtype)
+
+
+def _relu_bn(x: jax.Array, count: jax.Array,
+             seg: "tuple | None" = None) -> jax.Array:
+    """ReLU + masked feature standardization (BN stand-in), per scene.
+
+    ``seg = (sid, starts, counts, S)`` describes the scene segmentation of
+    this level's rows (scene id per row, each scene's first row and row
+    count, static scene-slot count S). ``seg=None`` (or S == 1) is the
+    single-scene case: statistics over the whole valid prefix.
+
+    Per-scene statistics are computed on a scene-locally *aligned* view:
+    each scene's rows are sliced to positions [0, count_b) of a
+    capacity-sized buffer (``dynamic_slice`` from the scene's start row)
+    before the reduction, so the reduction sees the scene's rows at the same
+    positions — and therefore the same operand grouping — as a single-scene
+    run of any smaller capacity, with only zero rows appended. See
+    :func:`_rowsum` for why that gives exact batched/looped identity.
+    """
     x = jax.nn.relu(x)
-    denom = jnp.maximum(count.astype(x.dtype), 1.0)
-    mean = jnp.sum(jnp.where(mask, x, 0), 0) / denom
-    var = jnp.sum(jnp.where(mask, (x - mean) ** 2, 0), 0) / denom
-    return jnp.where(mask, (x - mean) * jax.lax.rsqrt(var + 1e-5), 0)
+    cap = x.shape[0]
+
+    def stats(v, valid, cnt):
+        # One-pass moments: var = E[x²] − mean², both sums in ONE matmul
+        # (mean-free summands; a (x − mean)² second pass would re-feed a
+        # reduction result through another reduction, compounding the
+        # codegen sensitivity _rowsum exists to avoid).
+        c = v.shape[1]
+        z = jnp.where(valid, v, 0)
+        s = _rowsum(jnp.concatenate([z, z * z], axis=1))
+        denom = jnp.maximum(cnt.astype(v.dtype), 1.0)
+        mean, ex2 = s[:c] / denom, s[c:] / denom
+        var = jnp.maximum(ex2 - mean * mean, 0.0)
+        return mean, jax.lax.rsqrt(var + 1e-5)
+
+    if seg is None or seg[3] == 1:
+        mask = (jnp.arange(cap) < count)[:, None]
+        mean, inv = stats(x, mask, count)
+        return jnp.where(mask, (x - mean) * inv, 0)
+    sid, starts, counts, S = seg
+    # Pad with a capacity of zeros so a slice starting anywhere in [0, cap]
+    # never clamps (clamping would shift the alignment the proof needs).
+    xpad = jnp.concatenate([x, jnp.zeros_like(x)])
+    local = jnp.arange(cap)
+    means, invs = [], []
+    for b in range(S):
+        sl = jax.lax.dynamic_slice(xpad, (starts[b], 0), (cap, x.shape[1]))
+        mean, inv = stats(sl, (local < counts[b])[:, None], counts[b])
+        means.append(mean)
+        invs.append(inv)
+    sid_c = jnp.clip(sid, 0, S - 1)
+    mean_r = jnp.stack(means)[sid_c]
+    inv_r = jnp.stack(invs)[sid_c]
+    valid = (sid < S)[:, None]
+    return jnp.where(valid, (x - mean_r) * inv_r, 0)
+
+
+def _level_segments(plan, layout: BitLayout) -> Dict[int, tuple]:
+    """Scene segmentation of every level's rows, derived from the batch
+    bits of the plan's packed coordinates.
+
+    Rows are sorted batch-major (batch bits are most significant), so each
+    scene is one contiguous segment per level; ``searchsorted`` on the
+    per-row scene ids yields each scene's start and count. Invalid (PAD)
+    rows get scene id S, which sorts after every real scene."""
+    S = 1 << layout.bb
+    segs = {}
+    for m, cs in plan.coords.items():
+        rows = jnp.arange(cs.capacity)
+        sid_raw = (cs.packed >> layout.shift_b).astype(jnp.int32) & (S - 1)
+        sid = jnp.where(rows < cs.count, sid_raw, S)
+        scene_ids = jnp.arange(S, dtype=sid.dtype)
+        starts = jnp.searchsorted(sid, scene_ids, side="left").astype(jnp.int32)
+        ends = jnp.searchsorted(sid, scene_ids, side="right").astype(jnp.int32)
+        segs[m] = (sid, starts, ends - starts, S)
+    return segs
 
 
 def pointcloud_forward(params: dict, net: PointCloudNet, plan,
-                       features: jax.Array) -> jax.Array:
+                       features: jax.Array, *,
+                       layout: BitLayout | None = None) -> jax.Array:
     """Run the feature-computation pass over a precomputed NetworkPlan.
 
     Handles UNet skip connections by stashing encoder outputs per level and
     concatenating at ``dec*_a`` layers (channel concat on the fine coords).
+
+    ``layout`` enables batched multi-scene execution: when given and it
+    carries batch bits, BN statistics and masking are computed *per scene*
+    (scene segments recovered from the batch bits of each level's packed
+    coordinates), so a batch-of-B run is bit-identical to B single-scene
+    runs. Without it (legacy single-scene calls), statistics span the whole
+    valid prefix — identical behavior, since one scene IS the whole prefix.
     """
+    from repro.core.sparse_tensor import SparseTensor
+
+    if isinstance(features, SparseTensor):
+        raise TypeError(
+            "pointcloud_forward takes a raw feature array aligned with the "
+            "plan's V0 rows; you passed a SparseTensor. Either run it "
+            "through a compiled session (repro.serve.compile_network(net, "
+            "layout)(st) — the recommended front door) or pass st.features "
+            "with a plan built from st.packed.")
+    missing = [s.name for s in net.specs if s.name not in plan.kmaps]
+    if missing:
+        raise ValueError(
+            f"plan has no kernel map for layer(s) {missing[:3]}{'...' if len(missing) > 3 else ''} — "
+            "it was built for different specs than this network's. Build "
+            "plan and network together, or let the session API own both: "
+            "repro.serve.compile_network(net, layout).")
+    cap0 = plan.kmaps[net.specs[0].name].m.shape[0] if net.specs else None
+    lvl0 = net.specs[0].m_in if net.specs else 0
+    in_cap = plan.coords[lvl0].capacity if lvl0 in plan.coords else cap0
+    if in_cap is not None and features.shape[0] != in_cap:
+        raise ValueError(
+            f"features rows ({features.shape[0]}) != plan input capacity "
+            f"({in_cap}) — plan and features were bucketed differently. The "
+            "session API (repro.serve.compile_network) pads both "
+            "consistently; if hand-stitching, pad features to the plan's "
+            "V0 capacity.")
+    segs = _level_segments(plan, layout) if (layout and layout.bb) else {}
     skips: Dict[int, jax.Array] = {}
     x = features
     for spec in net.specs:
@@ -188,7 +309,7 @@ def pointcloud_forward(params: dict, net: PointCloudNet, plan,
             if skip is not None:
                 x = jnp.concatenate([x, skip], axis=-1)
         x = apply_spconv(params[spec.name], spec, x, kmap)
-        x = _relu_bn(x, kmap.out_count)
+        x = _relu_bn(x, kmap.out_count, segs.get(spec.m_out))
         if spec.name.startswith("enc") and spec.name.endswith("_b"):
             skips[spec.m_out] = x
         if spec.name.startswith("stem"):

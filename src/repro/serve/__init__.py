@@ -1,2 +1,4 @@
-from .engine import ServeEngine, Request
+from .engine import (ServeEngine, Request, PointCloudServeEngine,
+                     PointCloudRequest)
 from .bucketing import BucketedPlanner, bucket_capacity, bucket_packed
+from .session import SpiraSession, compile_network

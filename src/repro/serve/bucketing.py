@@ -12,6 +12,11 @@ dedup, and every downstream operator understands the (sorted prefix + PAD
 tail) CoordSet contract — a bucketed plan is bit-identical to the unbucketed
 plan on the first ``count`` rows; only capacities (and therefore kernel-map
 row counts) grow to the bucket.
+
+Since the session API landed, this policy is an *internal detail* of
+``serve.session.SpiraSession`` (whose jit cache is the bucket cache — one
+compiled plan+forward executable per bucket). :class:`BucketedPlanner`
+remains for callers who want bucketed *plans* without the feature pass.
 """
 from __future__ import annotations
 

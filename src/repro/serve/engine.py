@@ -1,26 +1,123 @@
-"""Batched serving engine: slot-based continuous batching.
+"""Batched serving engines: point-cloud request batching + LM slot batching.
 
-A fixed pool of B slots shares one decode_step jit. Requests claim a free
-slot, run prefill into that slot's cache region, then join the shared
-per-step decode batch; finished slots are recycled without recompiling
-(everything is static-shape). Greedy or temperature sampling.
+Two engines share the plan-ahead philosophy (static shapes, precomputed
+indexing/caches, zero per-request compilation):
 
-This is the serving counterpart of the paper's "inference engine" framing —
-the SpC engine serves point-cloud networks, the LM engine serves the
-assigned architectures; both share the plan-ahead philosophy (static shapes,
-precomputed indexing/caches, zero per-request compilation).
+* :class:`PointCloudServeEngine` — the SpC serving loop the paper's
+  "inference engine" framing asks for: per-scene requests queue up, get
+  packed into batched :class:`SparseTensor`s (scene index in the layout's
+  batch bits), run through ONE compiled :class:`SpiraSession` call, and are
+  answered with per-scene logits. Capacity bucketing (inside the session)
+  keeps the number of compiled executables at one per (bucket) — scene-size
+  variance never recompiles.
+
+* :class:`ServeEngine` — slot-based continuous batching for the LM
+  architectures: a fixed pool of B slots shares one decode_step jit;
+  requests claim a free slot, prefill into its cache region, then join the
+  shared per-step decode batch; finished slots recycle without recompiling.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from collections import deque
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sparse_tensor import SparseTensor
 from repro.models import transformer as tf
 from repro.models.common import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# point-cloud serving: request queue over a compiled SpiraSession
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PointCloudRequest:
+    """One scene in, per-voxel logits out.
+
+    ``coords`` are guard-biased integer voxels [N, 3] (data-pipeline space,
+    same contract as ``data.scenes``), ``features`` the aligned [N, C] rows.
+    After serving, ``logits`` [n, n_classes] and ``voxels`` [n, 3] hold the
+    answer on the scene's rows of the network's OUTPUT-level coordinate set:
+    for a segmentation net ending at level 0 (e.g. minkunet42) that is the
+    scene's sorted deduplicated input voxels (n <= N); for a net ending at a
+    coarser level (e.g. sparse_resnet21, level 3) it is the scene's
+    downsampled stride-2^m voxels — n can be far smaller than N.
+    """
+
+    coords: np.ndarray
+    features: np.ndarray
+    logits: Optional[np.ndarray] = None
+    voxels: Optional[np.ndarray] = None
+    done: bool = False
+
+
+class PointCloudServeEngine:
+    """Queue per-scene requests, answer them in batched session calls.
+
+    >>> session = compile_network(net, layout, batch=4)
+    >>> eng = PointCloudServeEngine(session)
+    >>> eng.run(requests)          # or submit() + step() for a live loop
+
+    Each :meth:`step` drains up to ``session.num_scenes`` requests, packs
+    them into one batched SparseTensor via the session's layout, runs the
+    session once, and scatters per-scene logits back onto the requests.
+    A partially full batch is fine (unused scene slots simply don't occur
+    in the coordinate set); a single request still gets a correct answer.
+    """
+
+    def __init__(self, session, max_batch: Optional[int] = None):
+        from .session import SpiraSession
+
+        if not isinstance(session, SpiraSession):
+            raise TypeError(
+                f"PointCloudServeEngine drives a compiled SpiraSession, got "
+                f"{type(session).__name__}; build one with "
+                "repro.serve.compile_network(net, layout, batch=B).")
+        self.session = session
+        self.max_batch = min(max_batch or session.num_scenes,
+                             session.num_scenes)
+        self.pending: deque[PointCloudRequest] = deque()
+        self.batches_run = 0
+        self.scenes_served = 0
+
+    def submit(self, req: PointCloudRequest) -> None:
+        self.pending.append(req)
+
+    def step(self) -> List[PointCloudRequest]:
+        """Serve one batch (up to ``max_batch`` queued requests)."""
+        batch = [self.pending.popleft()
+                 for _ in range(min(self.max_batch, len(self.pending)))]
+        if not batch:
+            return []
+        st = SparseTensor.from_point_clouds(
+            [(r.coords, r.features) for r in batch], self.session.layout)
+        out = self.session(st)
+        for req, scene in zip(batch, out.unbatch()):
+            n = int(scene.count)
+            req.logits = np.asarray(scene.features)[:n]
+            req.voxels, _ = scene.coords()
+            req.done = True
+        self.batches_run += 1
+        self.scenes_served += len(batch)
+        return batch
+
+    def run(self, requests: Sequence[PointCloudRequest]
+            ) -> List[PointCloudRequest]:
+        for r in requests:
+            self.submit(r)
+        while self.pending:
+            self.step()
+        return list(requests)
+
+
+# ---------------------------------------------------------------------------
+# LM serving: slot-based continuous batching
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass

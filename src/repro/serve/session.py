@@ -1,0 +1,269 @@
+"""SpiraSession: one front door from raw points to logits.
+
+Spira's thesis is that indexing and computation decouple and can be planned
+network-wide at start (§5.5). This module makes that the *API*: a session is
+a compile-once/run-many pipeline object that owns everything a caller used
+to hand-stitch —
+
+* spec resolution and tuner persistence (``core.tuner.apply_tuning``),
+* capacity bucketing (power-of-two buckets, PAD padding — the
+  ``serve.bucketing`` policy, now an internal detail),
+* network-wide plan building (``core.build_network_plan``) fused with the
+  feature pass into ONE jitted graph,
+
+so the hot path is a single call::
+
+    session = compile_network(net, layout, params=params, batch=4)
+    out = session(SparseTensor.from_point_clouds(clouds, session.layout))
+    per_scene = out.unbatch()
+
+The jit cache *is* the bucket cache: the session pads every input to its
+power-of-two capacity bucket, so all requests in a bucket hit one compiled
+executable and ``session.compile_count`` == number of distinct buckets seen
+(same ``_cache_size`` contract the PR-2 ``BucketedPlanner`` tests rely on).
+
+SparseTensor layout and why batching is free
+--------------------------------------------
+A :class:`~repro.core.sparse_tensor.SparseTensor` is (features, packed,
+count, layout): ``packed[: count]`` strictly ascending deduplicated packed
+voxel words, PAD (int max) tail, feature rows aligned. Batched tensors fold
+the scene index into the ``BitLayout.bb`` bits — the word's *most
+significant* field. That single choice is why the whole indexing pipeline
+runs batched without modification:
+
+* **Sortedness is batch-major** — the sorted batched array is the
+  concatenation of per-scene sorted arrays, so scene rows are contiguous at
+  V0 and stay contiguous at every downsampled level.
+* **``round_down`` never touches batch bits** — it clears low bits of the
+  x/y/z fields only, so the round-down lemma (sorted input splits into
+  ``4^Δ`` interleaved sorted runs keyed by cleared (x, y) residues; see
+  ``packing.round_down``) is batch-oblivious and the single-sort merge
+  downsample works on batched streams unchanged.
+* **The guard band isolates scenes** — weight offsets carry no batch
+  component and real x/y/z field values stay ``guard`` away from field
+  boundaries, so offset queries can never borrow/carry into the batch field
+  and alias a neighboring scene's voxel: kernel maps cannot cross scenes.
+
+Feature computation is batch-aware in exactly one place: BN statistics are
+computed per scene (``models.pointcloud._relu_bn`` with the scene segments
+recovered from each level's batch bits) with a zero-extension-invariant
+matmul reduction (``models.pointcloud._rowsum``), which
+makes a batch-of-B run *bit-identical* to B single-scene runs — tested in
+tests/test_session.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LayerTuneResult, apply_tuning, build_network_plan,
+                        tune_layer_cost_model, tune_layer_measure,
+                        zdelta_offsets)
+from repro.core.network_plan import NetworkPlan
+from repro.core.packing import BitLayout
+from repro.core.sparse_tensor import SparseTensor, ensure_sparse_tensor
+from repro.core.spconv import SpConvSpec
+from repro.models.pointcloud import (PointCloudNet, init_pointcloud,
+                                     pointcloud_forward)
+from .bucketing import bucket_capacity
+
+
+@dataclasses.dataclass
+class SpiraSession:
+    """Compiled point-cloud pipeline: ``session(st) -> st`` of logits.
+
+    Built by :func:`compile_network` — do not construct directly unless you
+    already hold resolved (tuned) specs. The session is the only hot-path
+    entry point; it accepts any :class:`SparseTensor` whose layout matches
+    (single-scene or batched up to ``num_scenes``) and any size (bucketed
+    internally).
+    """
+
+    net: PointCloudNet
+    layout: BitLayout
+    params: dict
+    engine: str = "zdelta"
+    downsample_method: str = "auto"
+    min_bucket: int = 1024
+    max_bucket: Optional[int] = None
+
+    def __post_init__(self):
+        specs = self.net.conv_specs()
+        layout = self.layout
+        engine = self.engine
+        method = self.downsample_method
+        net = self.net
+
+        out_level = specs[-1].m_out if specs else 0
+
+        @jax.jit
+        def run(params, packed, feats):
+            plan = build_network_plan(packed, specs=specs, layout=layout,
+                                      engine=engine,
+                                      downsample_method=method)
+            logits = pointcloud_forward(params, net, plan, feats,
+                                        layout=layout)
+            out = plan.coords[out_level]
+            return logits, out.packed, out.count
+
+        self._fn = run
+        self._plan_fn = jax.jit(
+            lambda packed: build_network_plan(
+                packed, specs=specs, layout=layout, engine=engine,
+                downsample_method=method))
+
+    # -- hot path ---------------------------------------------------------
+
+    def __call__(self, st: SparseTensor) -> SparseTensor:
+        ensure_sparse_tensor(st, where="SpiraSession")
+        if st.layout != self.layout:
+            raise ValueError(
+                f"SparseTensor layout {st.layout} != session layout "
+                f"{self.layout}. Build inputs against the session's layout "
+                "(session.layout) — e.g. SparseTensor.from_point_clouds("
+                "clouds, session.layout) — or compile a session for this "
+                "layout with compile_network(net, layout).")
+        if st.channels != self.net.in_channels:
+            raise ValueError(
+                f"SparseTensor has {st.channels} feature channels; "
+                f"{self.net.name} expects {self.net.in_channels}.")
+        stp = st.pad_to(self._bucket(st.capacity))
+        logits, out_packed, out_count = self._fn(self.params, stp.packed,
+                                                 stp.features)
+        # Logits live on the network's OUTPUT level coordinate set (== the
+        # input set only for submanifold-ending segmentation nets).
+        return SparseTensor(features=logits, packed=out_packed,
+                            count=out_count, layout=self.layout)
+
+    def plan(self, st: SparseTensor) -> NetworkPlan:
+        """The network plan the session would use for ``st`` (bucketed) —
+        for inspection/benchmarks; the hot path fuses this into ``run``."""
+        ensure_sparse_tensor(st, where="SpiraSession.plan")
+        stp = st.pad_to(self._bucket(st.capacity))
+        return self._plan_fn(stp.packed)
+
+    def _bucket(self, n: int) -> int:
+        return bucket_capacity(n, min_bucket=self.min_bucket,
+                               max_bucket=self.max_bucket)
+
+    # -- facts ------------------------------------------------------------
+
+    @property
+    def num_scenes(self) -> int:
+        """Scene slots per call (1 << layout.bb); any B <= this works."""
+        return 1 << self.layout.bb
+
+    @property
+    def compile_count(self) -> int:
+        """Compiled executables so far — one per distinct capacity bucket
+        (the jit cache is the bucket cache)."""
+        cache_size = getattr(self._fn, "_cache_size", None)
+        return int(cache_size()) if cache_size is not None else -1
+
+    def __repr__(self):
+        return (f"SpiraSession({self.net.name}, engine={self.engine!r}, "
+                f"scenes<={self.num_scenes}, layout={self.layout}, "
+                f"compiled_buckets={self.compile_count})")
+
+
+TunerArg = Union[None, str, Mapping[str, LayerTuneResult]]
+
+
+def compile_network(
+    net: PointCloudNet,
+    layout: BitLayout,
+    *,
+    params: Optional[dict] = None,
+    key: Optional[jax.Array] = None,
+    batch: int = 1,
+    engine: str = "zdelta",
+    downsample_method: str = "auto",
+    min_bucket: int = 1024,
+    max_bucket: Optional[int] = None,
+    tuner: TunerArg = None,
+    tune_sample: Optional[SparseTensor] = None,
+    dtype=jnp.float32,
+) -> SpiraSession:
+    """Build a :class:`SpiraSession` — the compile-once front door.
+
+    * ``batch`` widens the layout's batch field to hold that many scenes
+      (no-op if ``layout`` already carries enough batch bits). One session
+      then serves any 1..batch scenes per call.
+    * ``params`` — network parameters; freshly initialized from ``key``
+      (default ``jax.random.key(0)``) when omitted.
+    * ``tuner`` — absorbs the one-time §5.4 tuning step:
+        - ``None``: use the specs as authored.
+        - ``"cost_model"``: analytic per-layer (t, backend, symmetry) choice
+          from a sample plan's kernel-map statistics (device-free;
+          ``tune_sample`` required).
+        - ``"measure"``: wall-clock joint (t, backend, bm, bn) sweep plus
+          exact superwindow sizing (``plan_superwindow``) per layer
+          (``tune_sample`` required; honest on TPU, indicative on CPU).
+        - a mapping ``{layer_name: LayerTuneResult}``: precomputed results
+          (e.g. persisted from a previous run), applied via
+          ``core.tuner.apply_tuning``.
+      Tuned specs are persisted on the session's network — the session IS
+      the tuner persistence.
+    """
+    if (1 << layout.bb) < batch:
+        layout = layout.with_batch(batch)
+    if params is None:
+        params = init_pointcloud(key if key is not None else jax.random.key(0),
+                                 net, dtype)
+    if tuner is not None:
+        specs = _tune_specs(net, layout, params, tuner, tune_sample,
+                            engine=engine, downsample_method=downsample_method,
+                            min_bucket=min_bucket)
+        net = dataclasses.replace(net, specs=specs)
+    return SpiraSession(net=net, layout=layout, params=params, engine=engine,
+                        downsample_method=downsample_method,
+                        min_bucket=min_bucket, max_bucket=max_bucket)
+
+
+def _tune_specs(net: PointCloudNet, layout: BitLayout, params: dict,
+                tuner: TunerArg, tune_sample: Optional[SparseTensor], *,
+                engine: str, downsample_method: str,
+                min_bucket: int) -> Tuple[SpConvSpec, ...]:
+    """Resolve ``tuner`` into a tuned spec tuple (see compile_network)."""
+    if isinstance(tuner, Mapping):
+        return tuple(apply_tuning(s, tuner[s.name]) if s.name in tuner else s
+                     for s in net.specs)
+    if tuner not in ("cost_model", "measure"):
+        raise ValueError(f"tuner must be None, 'cost_model', 'measure' or a "
+                         f"{{layer: LayerTuneResult}} mapping, got {tuner!r}")
+    if tune_sample is None:
+        raise ValueError(f"tuner={tuner!r} needs tune_sample= (a "
+                         "representative SparseTensor) to build the sample "
+                         "plan it tunes against")
+    ensure_sparse_tensor(tune_sample, where="compile_network(tune_sample=)")
+    stp = tune_sample.pad_to(bucket_capacity(tune_sample.capacity,
+                                             min_bucket=min_bucket))
+    plan = build_network_plan(stp.packed, specs=net.conv_specs(),
+                              layout=layout, engine=engine,
+                              downsample_method=downsample_method)
+    on_tpu = jax.default_backend() == "tpu"
+    tuned = []
+    for s in net.specs:
+        kmap = plan.kmaps[s.name]
+        if tuner == "cost_model":
+            res = tune_layer_cost_model(
+                kmap, K=s.K, stride=s.offset_stride, cin=s.cin, cout=s.cout,
+                backends=("xla", "pallas") if on_tpu else ("xla",),
+                submanifold=s.submanifold)
+        else:
+            feats = jax.random.normal(jax.random.key(hash(s.name) & 0xffff),
+                                      (plan.coords[s.m_in].capacity, s.cin),
+                                      jnp.float32)
+            _, anchors, zstep = zdelta_offsets(s.K, s.offset_stride, layout)
+            coords = (plan.coords[s.m_in], plan.coords[s.m_out], anchors,
+                      zstep)
+            res = tune_layer_measure(
+                feats, kmap, params[s.name]["w"], K=s.K,
+                stride=s.offset_stride, ws_capacity=kmap.m.shape[0],
+                backends=("xla", "pallas") if on_tpu else ("xla",),
+                coords=coords, submanifold=s.submanifold)
+        tuned.append(apply_tuning(s, res))
+    return tuple(tuned)

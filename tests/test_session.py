@@ -1,0 +1,253 @@
+"""Session-API suite: SparseTensor + SpiraSession contracts.
+
+The load-bearing assertions:
+
+* **Batched bit-identity** — a batch-of-B session call equals B single-scene
+  session calls *bitwise* (features, coords, counts), across engines
+  ``zdelta``/``zdelta_pallas`` and K ∈ {3, 5}. This is what per-scene BN
+  statistics with the zero-extension-invariant reduction
+  (models.pointcloud._rowsum)
+  plus the batch-bit packing lemma (core.sparse_tensor module doc) buy.
+* **Jit cache == bucket cache** — varying request sizes inside one capacity
+  bucket must not recompile; crossing a bucket boundary compiles exactly
+  one more executable (the ``_cache_size`` pattern from
+  tests/test_plan_pipeline.py).
+* **Batched plan decomposition** — every downsample level of a batched plan
+  is the scene-major concatenation of the single-scene levels (the
+  round-down lemma is batch-oblivious).
+* **Actionable shims** — raw arrays / mismatched layouts / foreign plans
+  fail with errors that name the session API.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (SparseTensor, SpConvSpec, build_network_plan,
+                        build_coord_set, downsample)
+from repro.core.voxel import pad_value
+from repro.data import scenes
+from repro.models.pointcloud import PointCloudNet, init_pointcloud, pointcloud_forward
+from repro.serve import (PointCloudRequest, PointCloudServeEngine,
+                         compile_network)
+
+
+def _tiny_net(K: int) -> PointCloudNet:
+    specs = (
+        SpConvSpec("l0", 4, 8, K=K, m_in=0, m_out=0),
+        SpConvSpec("l1", 8, 8, K=3, m_in=0, m_out=1),
+        SpConvSpec("l2", 8, 8, K=K, m_in=1, m_out=1),
+    )
+    return PointCloudNet(f"tiny_k{K}", specs, in_channels=4, n_classes=5)
+
+
+def _clouds(B, seed=7, extent=(28, 24, 16), overlap=0.5):
+    batch = scenes.scene_batch(seed=seed, batch=B, kind="indoor",
+                               extent=extent, overlap=overlap)
+    rng = np.random.default_rng(seed)
+    return batch[0].layout, [
+        (sc.coords, rng.normal(size=(len(sc.coords), 4)).astype(np.float32))
+        for sc in batch]
+
+
+# ---------------------------------------------------------------------------
+# batched bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["zdelta", "zdelta_pallas"])
+@pytest.mark.parametrize("K", [3, 5])
+@pytest.mark.parametrize("B", [2, 4])
+def test_batched_bit_identity(engine, K, B):
+    """session(batch-of-B) == concat of B single-scene session runs, exact."""
+    layout, clouds = _clouds(B)
+    sess = compile_network(_tiny_net(K), layout, batch=B, engine=engine,
+                           min_bucket=128)
+    out_b = sess(SparseTensor.from_point_clouds(clouds, sess.layout))
+    per_scene = out_b.unbatch()
+    assert len(per_scene) == B
+    for i, (c, f) in enumerate(clouds):
+        o1 = sess(SparseTensor.from_point_clouds([(c, f)],
+                                                 sess.layout)).unbatch()[0]
+        n = int(o1.count)
+        assert n == int(per_scene[i].count)
+        np.testing.assert_array_equal(
+            np.asarray(per_scene[i].packed)[:n], np.asarray(o1.packed)[:n],
+            err_msg=f"scene {i} coords")
+        np.testing.assert_array_equal(
+            np.asarray(per_scene[i].features)[:n],
+            np.asarray(o1.features)[:n], err_msg=f"scene {i} logits")
+
+
+def test_batched_output_level_coords():
+    """Logits ride the network's OUTPUT level coordinate set (level 1 for
+    the tiny net), not V0 — and unbatch recovers per-scene voxels there."""
+    layout, clouds = _clouds(2)
+    sess = compile_network(_tiny_net(3), layout, batch=2, min_bucket=128)
+    out = sess(SparseTensor.from_point_clouds(clouds, sess.layout))
+    # output count equals the batched level-1 coordinate count
+    st = SparseTensor.from_point_clouds(clouds, sess.layout)
+    plan = sess.plan(st)
+    assert int(out.count) == int(plan.coords[1].count)
+    for scene in out.unbatch():
+        v, _ = scene.coords()
+        assert (v % 2 == 0).all()        # level-1 coords are stride-2
+
+
+# ---------------------------------------------------------------------------
+# jit cache == bucket cache
+# ---------------------------------------------------------------------------
+
+def test_session_jit_cache_counts():
+    layout, clouds = _clouds(1, extent=(48, 40, 24))
+    coords, feats = clouds[0]
+    sess = compile_network(_tiny_net(3), layout, min_bucket=128)
+    assert sess.compile_count == 0
+    for n in (400, 450, 510):            # all bucket to 512
+        sess(SparseTensor.from_point_cloud(coords[:n], feats[:n],
+                                           sess.layout))
+    assert sess.compile_count == 1
+    sess(SparseTensor.from_point_cloud(coords[:700], feats[:700],
+                                       sess.layout))   # bucket 1024
+    assert sess.compile_count == 2
+
+
+# ---------------------------------------------------------------------------
+# batched plan decomposition (round-down lemma is batch-oblivious)
+# ---------------------------------------------------------------------------
+
+def test_batched_levels_decompose_per_scene():
+    layout, clouds = _clouds(3)
+    blayout = layout.with_batch(3)
+    st = SparseTensor.from_point_clouds(clouds, blayout)
+    specs = (SpConvSpec("l", 4, 8, K=3, m_in=0, m_out=2),)
+    plan = build_network_plan(st.packed, specs=specs, layout=blayout)
+    starts, counts = st.scene_segments()
+    bmask = (1 << blayout.shift_b) - 1
+    for m in (0, 2):
+        got = np.asarray(plan.coords[m].packed)
+        gn = int(plan.coords[m].count)
+        sid = got[:gn] >> blayout.shift_b
+        # scene-major contiguity at every level
+        assert (np.diff(sid) >= 0).all()
+        for i, (c, f) in enumerate(clouds):
+            seg = got[:gn][sid == i] & bmask
+            single = build_coord_set(
+                jnp.asarray(np.sort(np.asarray(
+                    SparseTensor.from_point_cloud(c, f, layout).packed))))
+            want = single if m == 0 else downsample(single, layout, m)
+            wn = int(want.count)
+            assert len(seg) == wn, f"level {m} scene {i}"
+            np.testing.assert_array_equal(seg, np.asarray(want.packed)[:wn])
+
+
+# ---------------------------------------------------------------------------
+# SparseTensor construction / splitting
+# ---------------------------------------------------------------------------
+
+def test_sparse_tensor_roundtrip_and_dedup():
+    layout, clouds = _clouds(2)
+    # scramble input order + inject duplicates: constructor must sort/dedup
+    c0, f0 = clouds[0]
+    perm = np.random.default_rng(0).permutation(len(c0))
+    c_dup = np.concatenate([c0[perm], c0[:5]])
+    f_dup = np.concatenate([f0[perm], 99 * np.ones((5, 4), np.float32)])
+    st = SparseTensor.from_point_cloud(c_dup, f_dup, layout)
+    assert int(st.count) == len(c0)
+    p = np.asarray(st.packed)[: int(st.count)]
+    assert (np.diff(p) > 0).all()        # strictly ascending, deduplicated
+    # batched roundtrip
+    stb = SparseTensor.from_point_clouds(clouds, layout)
+    assert stb.num_scenes == 2
+    back = stb.unbatch()
+    for (c, f), sc in zip(clouds, back):
+        v, b = sc.coords()
+        # packed ascending == lexicographic (x, y, z) == np.unique row order
+        np.testing.assert_array_equal(v, np.unique(c, axis=0))
+        assert (b == 0).all()
+
+
+def test_scene_batch_overlap_control():
+    hi = scenes.scene_batch(seed=1, batch=2, extent=(32, 28, 16), overlap=0.9)
+    lo = scenes.scene_batch(seed=1, batch=2, extent=(32, 28, 16), overlap=0.0)
+
+    def shared(pair):
+        a = {tuple(r) for r in pair[0].coords}
+        b = {tuple(r) for r in pair[1].coords}
+        return len(a & b) / max(1, min(len(a), len(b)))
+
+    assert shared(hi) > shared(lo) + 0.2
+    assert hi[0].layout == hi[1].layout  # one shared layout per batch
+
+
+# ---------------------------------------------------------------------------
+# serving loop
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_matches_direct_session():
+    layout, clouds = _clouds(4)
+    sess = compile_network(_tiny_net(3), layout, batch=2, min_bucket=128)
+    reqs = [PointCloudRequest(coords=c, features=f) for c, f in clouds]
+    eng = PointCloudServeEngine(sess)
+    eng.run(reqs)
+    assert eng.batches_run == 2 and eng.scenes_served == 4
+    for (c, f), r in zip(clouds, reqs):
+        assert r.done
+        direct = sess(SparseTensor.from_point_clouds([(c, f)],
+                                                     sess.layout)).unbatch()[0]
+        n = int(direct.count)
+        assert r.logits.shape == (n, 5)
+        np.testing.assert_array_equal(r.logits,
+                                      np.asarray(direct.features)[:n])
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims / actionable errors
+# ---------------------------------------------------------------------------
+
+def test_session_rejects_raw_arrays():
+    layout, clouds = _clouds(1)
+    sess = compile_network(_tiny_net(3), layout, min_bucket=128)
+    with pytest.raises(TypeError, match="SparseTensor.from_point_cloud"):
+        sess(np.zeros((128,), np.int32))
+
+
+def test_session_rejects_foreign_layout():
+    layout, clouds = _clouds(1)
+    sess = compile_network(_tiny_net(3), layout, min_bucket=128)
+    c, f = clouds[0]
+    other = layout.with_batch(4)
+    with pytest.raises(ValueError, match="session.layout"):
+        sess(SparseTensor.from_point_cloud(c, f, other))
+
+
+def test_forward_rejects_sparse_tensor_and_foreign_plan():
+    layout, clouds = _clouds(1)
+    c, f = clouds[0]
+    st = SparseTensor.from_point_cloud(c, f, layout)
+    net = _tiny_net(3)
+    params = init_pointcloud(jax.random.key(0), net)
+    plan = build_network_plan(st.packed, specs=net.conv_specs(),
+                              layout=layout)
+    with pytest.raises(TypeError, match="compile_network"):
+        pointcloud_forward(params, net, plan, st)
+    other = PointCloudNet("other", (SpConvSpec("zz", 4, 8, K=3),), 4, 5)
+    with pytest.raises(ValueError, match="compile_network"):
+        pointcloud_forward(params, other, plan, st.features)
+    with pytest.raises(ValueError, match="capacity"):
+        pointcloud_forward(params, net, plan, st.features[:64])
+
+
+def test_tuned_session_still_bit_identical():
+    """Tuner absorption (cost_model) must not break batched bit-identity."""
+    layout, clouds = _clouds(2)
+    sample = SparseTensor.from_point_clouds(clouds[:1], layout)
+    sess = compile_network(_tiny_net(3), layout, batch=2, min_bucket=128,
+                           tuner="cost_model", tune_sample=sample)
+    assert all(s.backend == "xla" for s in sess.net.specs)  # tuning persisted
+    out_b = sess(SparseTensor.from_point_clouds(clouds, sess.layout))
+    o0 = sess(SparseTensor.from_point_clouds(clouds[:1],
+                                             sess.layout)).unbatch()[0]
+    n = int(o0.count)
+    np.testing.assert_array_equal(
+        np.asarray(out_b.unbatch()[0].features)[:n],
+        np.asarray(o0.features)[:n])
