@@ -1,0 +1,114 @@
+"""Training-step trajectory bench — persisted to BENCH_train.json (same
+accumulate-history contract as BENCH_e2e/BENCH_dataflow/BENCH_indexing).
+
+Quantities under test, per engine:
+
+* ``fwd_us`` vs ``step_us`` — forward-only session call vs full fused
+  plan→forward→loss→grad→update step at the same bucketed capacity. Their
+  ratio (``bwd_over_fwd``) is the whole cost of differentiation; the
+  kernel-map-transposed VJPs keep it in GEMM territory (the backward is the
+  same dataflows over transposed maps — no extra searches, no gathered
+  intermediate), so it should sit near the classic ~2–3× of dense nets,
+  not blow up with indexing work.
+* ``plan_us`` and ``plan_share_of_step`` — the network plan's share of one
+  train step. Both forward and backward consume ONE plan per step
+  (Minuet's amortization argument applied inside the step); a
+  backward-side re-index would double this share.
+* ``steps_to_amortize_compile`` — compile cost of the fused train graph
+  over the steady-state step, the plan-ahead trade training buys into.
+
+Off-TPU the ``zdelta_pallas`` row times the Pallas interpreter (relative
+cost only, see benchmarks/common.py) and is restricted to smoke size.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.data import scenes
+from repro.models import pointcloud as pc
+from repro.serve import compile_network
+from repro.train.pointcloud import PointCloudTrainConfig, labeled_batch
+from .common import emit, timeit, us
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "BENCH_train.json")
+
+
+def run(smoke: bool = False):
+    B = 2
+    extent = (48, 40, 24) if smoke else (64, 48, 24)
+    n_classes = 8
+    batch = scenes.scene_batch(seed=0, batch=B, kind="indoor", extent=extent,
+                               labels=True, n_classes=n_classes)
+    net = pc.tiny_segnet(in_channels=4, n_classes=n_classes) if smoke \
+        else pc.minkunet42(in_channels=4, n_classes=n_classes)
+    rows, engines_rec = [], {}
+    engines = ["zdelta", "zdelta_pallas"]
+    if not smoke and jax.default_backend() != "tpu":
+        engines = ["zdelta"]   # interpreter-priced pallas only at smoke size
+
+    for engine in engines:
+        session = compile_network(net, batch[0].layout, batch=B,
+                                  engine=engine)
+        trainer = session.compile_train(PointCloudTrainConfig())
+        st, labels = labeled_batch(batch, session.layout)
+
+        t0 = time.perf_counter()
+        trainer.step(st, labels)                  # compile + first step
+        compile_s = time.perf_counter() - t0
+        t_step = timeit(lambda: trainer.step(st, labels), repeats=5, warmup=1)
+        t_fwd = timeit(lambda: session(st).features, repeats=5, warmup=1)
+        t_plan = timeit(lambda: session.plan(st).coords[0].packed,
+                        repeats=5, warmup=1)
+
+        rec = {
+            "voxels": int(st.count),
+            "plan_us": us(t_plan),
+            "fwd_us": us(t_fwd),
+            "step_us": us(t_step),
+            "bwd_over_fwd": round(t_step / t_fwd, 3),
+            "plan_share_of_step": round(t_plan / t_step, 3),
+            "compile_s": round(compile_s, 2),
+            "steps_to_amortize_compile": round(compile_s / t_step, 1),
+        }
+        engines_rec[engine] = rec
+        rows.append((f"train/{engine}/plan", us(t_plan),
+                     f"share_of_step={rec['plan_share_of_step']}"))
+        rows.append((f"train/{engine}/fwd", us(t_fwd), ""))
+        rows.append((f"train/{engine}/step", us(t_step),
+                     f"bwd_over_fwd={rec['bwd_over_fwd']}"))
+
+    rec = {
+        "host_backend": jax.default_backend(),
+        "net": net.name,
+        "batch": B,
+        "smoke": smoke,
+        "note": ("step = fused plan+forward+loss+grad+update at the session's "
+                 "bucketed capacity; fwd = forward-only session call at the "
+                 "same capacity; one plan serves both directions (transposed-"
+                 "map VJPs), so plan_share_of_step would double without it"),
+        "engines": engines_rec,
+    }
+    hist = []
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            hist = json.load(f)
+            if not isinstance(hist, list):
+                hist = [hist]
+    hist.append(rec)
+    with open(RESULTS, "w") as f:
+        json.dump(hist, f, indent=1)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    a = ap.parse_args()
+    run(smoke=a.smoke)

@@ -14,12 +14,15 @@ fi
 
 # interpret-mode Pallas smoke: every fused kernel + the backend dispatch +
 # the zdelta_pallas indexing engine, on tiny shapes (seconds, not minutes).
+# Includes the backward direction: the fused kernels are the training
+# VJPs' engines and must stay bit-par with the XLA backward.
 python -m pytest -x -q \
   tests/test_dataflow_backends.py::test_gather_gemm_bitmatch \
   tests/test_dataflow_backends.py::test_ws_scatter_bitmatch \
   tests/test_dataflow_backends.py::test_dispatch_pads_untiled_rows \
   tests/test_dataflow_backends.py::test_zdelta_pallas_engine_matches_zdelta \
-  "tests/test_kernels.py::test_zdelta_window_matches_xla[3-512]"
+  "tests/test_kernels.py::test_zdelta_window_matches_xla[3-512]" \
+  tests/test_grad.py::test_backward_pallas_xla_bit_parity
 
 # indexing smoke: superwindow kernel parity on a tiny scene (interpret mode)
 # + the single-sort merge downsample oracle check, so the PR-2 indexing
@@ -36,6 +39,14 @@ python -m pytest -x -q \
 # example smoke: the session front door runs headless end to end
 python examples/pointcloud_inference.py --smoke >/dev/null
 python examples/pointcloud_serve.py --smoke >/dev/null
+
+# train-smoke: 30 steps of the differentiable subsystem must reduce loss
+# (the example asserts final < initial and a bit-exact ckpt round-trip)
+python examples/train_pointcloud.py --smoke >/dev/null
+
+# train bench must stay runnable (writes BENCH_train.json: fwd vs fwd+bwd
+# step latency + the plan's share of a step)
+python -m benchmarks.bench_train --smoke >/dev/null
 
 # the dataflow bench must stay runnable end-to-end (writes BENCH_dataflow.json)
 python -m benchmarks.run --backend pallas dataflow >/dev/null

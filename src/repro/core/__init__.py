@@ -4,9 +4,12 @@ from .voxel import (CoordSet, build_coord_set, downsample, downsample_all,
                     downsample_merge, pad_value, resolve_downsample_method)
 from .zdelta import (zdelta_offsets, zdelta_search, zdelta_search_symmetric,
                      simple_bsearch, symmetrize_kernel_map,
-                     symmetry_anchor_count, expand_half_map)
-from .kernel_map import KernelMap, l1_partition, l1_norm_max, density_by_l1
-from .dataflow import output_stationary, weight_stationary, hybrid, hbm_bytes_model
+                     symmetry_anchor_count, expand_half_map,
+                     reset_search_calls, search_call_count)
+from .kernel_map import (KernelMap, l1_partition, l1_norm_max, density_by_l1,
+                         transpose_kernel_map)
+from .dataflow import (output_stationary, weight_stationary, hybrid,
+                       hbm_bytes_model, os_xla, ws_xla, ws_kept_map)
 from .spconv import SpConvSpec, init_spconv, apply_spconv
 from .sparse_tensor import SparseTensor, ensure_sparse_tensor
 from .network_plan import NetworkPlan, build_network_plan, sequential_plan_fns, plan_levels

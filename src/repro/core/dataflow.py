@@ -40,6 +40,44 @@ XLA fallback when a window overflows (see build_network_plan).
 
 ``hbm_bytes_model`` is the shared analytic traffic model benchmarks use to
 report the bytes the fused path saves next to wall-clock.
+
+Differentiability (the training subsystem's contract)
+-----------------------------------------------------
+``output_stationary`` and ``weight_stationary`` carry a ``jax.custom_vjp``
+built on the kernel-map transposition identity (Spira §5.4, TorchSparse's
+transposed-map training): ``M[i,k] = j ⇒ Mᵀ[j, mirror(k)] = i``. The
+backward pass therefore needs **no new kernel-map search**:
+
+* **dF_in** is the *same dataflow run over the transposed map*
+  (``kernel_map.transpose_kernel_map`` — one flat int32 scatter, the
+  rectangular generalization of ``zdelta.symmetrize_kernel_map``; for
+  submanifold maps it equals the forward map outright) with the weights
+  mirrored along the offset axis and transposed in (Cin, Cout). The same
+  backend dispatch applies, so on TPU the backward runs the *same fused
+  Pallas kernels* as forward (``spconv_gather_gemm`` for OS,
+  ``ws_scatter_gemm`` for WS) — training never materializes the
+  ``[M, Kd, Cin]`` intermediate either direction.
+* **dW** is Kd per-offset gathered-feature GEMMs ``Gₖᵀ @ g`` in a scan —
+  an ``[M, Cin]`` working set per offset, never ``[M, Kd, Cin]``.
+* WS drop semantics are honored exactly: pairs beyond ``capacity`` are
+  masked out of the map *before* transposition (``ws_kept_map``), so the
+  VJP is the true derivative of the capacity-dropped forward function.
+
+``hybrid`` composes the two custom VJPs; ``apply_spconv`` (and the whole
+``pointcloud_forward`` pass) differentiates through them with plain
+``jax.grad``. The raw XLA implementations stay exposed as :func:`os_xla` /
+:func:`ws_xla` (no custom VJP) so tests can compare our backward against
+JAX's autodiff of the reference path.
+
+Backward precondition — mirror-closed column sets: the transposition
+mirrors column position ``p`` to ``Kd−1−p``, which equals the true offset
+mirror ``δ → −δ`` only when the map's columns are a *mirror-closed,
+offset-ordered subset* of the K³ grid. The full map trivially qualifies,
+and so do ``l1_partition`` subsets (L1 is symmetric under negation and
+negation reverses the sorted order), which is every subset the engine
+itself ever takes a gradient through. Differentiating a hand-sliced
+arbitrary column subset would produce a correct forward but silently
+mispaired dF_in weights — don't.
 """
 from __future__ import annotations
 
@@ -50,38 +88,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel_map import KernelMap, l1_partition
+from .kernel_map import KernelMap, l1_partition, transpose_kernel_map
 
 
 def _mask_rows(x: jax.Array, count: jax.Array) -> jax.Array:
+    """Zero rows at and beyond ``count``. Skippable when the caller knows
+    statically that ``count == capacity`` (``SpConvSpec.dense``)."""
     return jnp.where((jnp.arange(x.shape[0]) < count)[:, None], x, 0)
 
 
+def bcast_rows(v: jax.Array, cap: int) -> jax.Array:
+    """Broadcast a [C] vector over ``cap`` rows as a rank-1 matmul
+    ``ones[cap, 1] @ v[None, :]`` instead of a plain broadcast.
+
+    Forward-exact (each element is ``1·v + nothing``), but the point is the
+    *backward*: the transpose of a dot is a dot, so the cotangent reduction
+    over rows that autodiff inserts here is a ``[1, cap] @ [cap, C]``
+    matmul — a library call with fixed k-panel blocking, bitwise invariant
+    under zero-row extension (``models.pointcloud._rowsum`` documents why
+    that property needs a dot) — instead of an XLA elementwise reduce whose
+    grouping drifts between capacity buckets. Every per-row broadcast on
+    the training forward path (BN stats, conv bias) routes through this one
+    helper so the invariance-critical idiom has a single home."""
+    return jnp.dot(jnp.ones((cap, 1), v.dtype), v[None, :])
+
+
 # ---------------------------------------------------------------------------
-# output-stationary
+# raw XLA implementations (reference-differentiable, no custom VJP)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("fuse", "backend", "bm", "bn"))
-def output_stationary(
-    features: jax.Array,   # [N_cap, Cin]
-    m: jax.Array,          # int32 [M_cap, Kd]  (kernel-map column subset)
-    weights: jax.Array,    # [Kd, Cin, Cout]
-    *,
-    fuse: bool = False,
-    backend: str = "xla",
-    bm: int = 0,
-    bn: int = 0,
-) -> jax.Array:
-    """OS dataflow. XLA: ``fuse=True`` materializes one [M, Kd, Cin] gather
-    and a single MXU contraction (max utilization, Kd·Cin-deep); default
-    scans offsets with an [M, Cin] working set (memory-safe). Pallas: the
-    implicit-GEMM kernel — gather fused in, no HBM intermediate, ``fuse``
-    is moot."""
-    from repro.kernels import ops as kops
-    use_pallas, _ = kops.resolve_backend(backend)
-    if use_pallas:
-        return kops.spconv_os_fused(features, m, weights, impl="pallas",
-                                    bm=bm, bn=bn)
+def os_xla(features: jax.Array, m: jax.Array, weights: jax.Array,
+           *, fuse: bool = False) -> jax.Array:
+    """OS dataflow, pure-XLA. ``fuse=True`` materializes one [M, Kd, Cin]
+    gather and a single MXU contraction (max utilization, Kd·Cin-deep);
+    default scans offsets with an [M, Cin] working set (memory-safe).
+
+    No custom VJP here — this is the autodiff oracle the gradient tests
+    differentiate with plain ``jax.grad`` (tests/test_grad.py)."""
     mc = m.shape[0]
     if fuse:
         idx = jnp.clip(m, 0)
@@ -99,34 +142,11 @@ def output_stationary(
     return acc.astype(features.dtype)
 
 
-# ---------------------------------------------------------------------------
-# weight-stationary
-# ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("capacity", "backend", "bm", "bn"))
-def weight_stationary(
-    features: jax.Array,   # [N_cap, Cin]
-    m: jax.Array,          # int32 [M_cap, Ks]
-    weights: jax.Array,    # [Ks, Cin, Cout]
-    *,
-    capacity: int,
-    backend: str = "xla",
-    bm: int = 0,
-    bn: int = 0,
-) -> jax.Array:
-    """WS dataflow with static per-offset pair capacity.
-
-    Valid pairs beyond ``capacity`` are dropped (choose capacity from the
-    tuner / column statistics; ``capacity = M_cap`` is always lossless).
-    The per-offset compaction is the TPU replacement for the paper's
-    filtering post-processing; the merge replaces atomicAdd (see module
-    doc). Pallas: the fused compact+GEMM+merge kernel, same drop
-    semantics."""
-    from repro.kernels import ops as kops
-    use_pallas, _ = kops.resolve_backend(backend)
-    if use_pallas:
-        return kops.spconv_ws_fused(features, m, weights, capacity=capacity,
-                                    impl="pallas", bc=bm, bn=bn)
+def ws_xla(features: jax.Array, m: jax.Array, weights: jax.Array,
+           *, capacity: int) -> jax.Array:
+    """WS dataflow, pure-XLA scan (compaction + GEMM + deterministic
+    scatter merge). Same drop semantics as the fused kernel. No custom VJP
+    (autodiff oracle; see :func:`os_xla`)."""
     mc = m.shape[0]
     rows = jnp.arange(mc, dtype=jnp.int32)
 
@@ -147,6 +167,192 @@ def weight_stationary(
     acc0 = jnp.zeros((mc, weights.shape[-1]), jnp.float32)
     acc, _ = jax.lax.scan(body, acc0, (m.T, weights))
     return acc.astype(features.dtype)
+
+
+# ---------------------------------------------------------------------------
+# shared backward machinery (kernel-map-transposed VJPs)
+# ---------------------------------------------------------------------------
+
+def ws_kept_map(m: jax.Array, capacity: int) -> jax.Array:
+    """The kernel map WS *actually computed with*: per-offset valid pairs
+    beyond ``capacity`` replaced by −1, replicating the compaction's
+    ``mode="drop"`` ordering (first ``capacity`` valid rows per column
+    survive). The VJP must differentiate the dropped function, not the
+    lossless one."""
+    valid = m >= 0
+    return jnp.where(valid & (jnp.cumsum(valid, axis=0) <= capacity), m, -1)
+
+
+def _grad_weights(weights: jax.Array) -> jax.Array:
+    """Weights as the backward dataflow wants them: mirrored along the
+    offset axis (column k of the transposed map corresponds to offset
+    −δ_{mirror(k)}) and transposed in (Cin, Cout) — [Kd, Cout, Cin]."""
+    return jnp.swapaxes(weights, 1, 2)[::-1]
+
+
+def _dw_per_offset(features: jax.Array, m: jax.Array, g: jax.Array,
+                   out_dtype) -> jax.Array:
+    """dW[k] = Gₖᵀ @ g with Gₖ the offset's gathered (masked) features —
+    one [M, Cin] gather + one GEMM per offset in a scan; fp32 accumulation
+    like the forward. Never materializes [M, Kd, Cin]."""
+    def body(carry, m_col):
+        gk = features[jnp.clip(m_col, 0)] \
+            * (m_col >= 0)[:, None].astype(features.dtype)
+        return carry, jnp.dot(gk.T, g, preferred_element_type=jnp.float32)
+
+    _, dw = jax.lax.scan(body, 0, m.T)
+    return dw.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# output-stationary
+# ---------------------------------------------------------------------------
+
+def _os_primal(cfg, features, m, weights):
+    fuse, backend, bm, bn, _ = cfg
+    from repro.kernels import ops as kops
+    use_pallas, _i = kops.resolve_backend(backend)
+    if use_pallas:
+        return kops.spconv_os_fused(features, m, weights, impl="pallas",
+                                    bm=bm, bn=bn)
+    return os_xla(features, m, weights, fuse=fuse)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _os_core(cfg, features, m, weights):
+    return _os_primal(cfg, features, m, weights)
+
+
+def _os_fwd(cfg, features, m, weights):
+    return _os_primal(cfg, features, m, weights), (features, m, weights)
+
+
+def _os_bwd(cfg, res, g):
+    fuse, backend, _, _, self_t = cfg
+    features, m, weights = res
+    # dF_in: the OS dataflow itself, over the transposed map with mirrored
+    # transposed weights — same backend, so Pallas forward ⇒ Pallas backward
+    # (the implicit-GEMM gather kernel reads g instead of F_in). Tile sizes
+    # re-auto (backward row count is N, not M). ``self_t`` (submanifold):
+    # the map is its own transpose, skip the M·K³ mirror scatter.
+    mt = m if self_t else transpose_kernel_map(m, n_in=features.shape[0])
+    df = _os_primal((fuse, backend, 0, 0, self_t), g, mt,
+                    _grad_weights(weights))
+    dw = _dw_per_offset(features, m, g, weights.dtype)
+    return df.astype(features.dtype), None, dw
+
+
+_os_core.defvjp(_os_fwd, _os_bwd)
+
+
+@partial(jax.jit, static_argnames=("fuse", "backend", "bm", "bn",
+                                   "self_transpose"))
+def output_stationary(
+    features: jax.Array,   # [N_cap, Cin]
+    m: jax.Array,          # int32 [M_cap, Kd]  (kernel-map column subset)
+    weights: jax.Array,    # [Kd, Cin, Cout]
+    *,
+    fuse: bool = False,
+    backend: str = "xla",
+    bm: int = 0,
+    bn: int = 0,
+    self_transpose: bool = False,
+) -> jax.Array:
+    """OS dataflow (differentiable — module doc). XLA: :func:`os_xla`.
+    Pallas: the implicit-GEMM kernel — gather fused in, no HBM
+    intermediate, ``fuse`` is moot. The custom VJP computes dF_in as the
+    OS pass over the transposed kernel map and dW as per-offset
+    gathered-feature GEMMs.
+
+    ``self_transpose``: caller asserts the map is its own transpose — a
+    (mirror-closed column subset of a) submanifold map, the §5.4 identity —
+    so the backward skips the mirror scatter and runs straight over ``m``.
+    ``apply_spconv`` sets it from ``spec.submanifold``; bit-identical
+    gradients either way (tests/test_grad.py)."""
+    return _os_core((fuse, backend, bm, bn, self_transpose), features, m,
+                    weights)
+
+
+# ---------------------------------------------------------------------------
+# weight-stationary
+# ---------------------------------------------------------------------------
+
+def _ws_primal(cfg, features, m, weights):
+    capacity, backend, bm, bn, _ = cfg
+    from repro.kernels import ops as kops
+    use_pallas, _i = kops.resolve_backend(backend)
+    if use_pallas:
+        return kops.spconv_ws_fused(features, m, weights, capacity=capacity,
+                                    impl="pallas", bc=bm, bn=bn)
+    return ws_xla(features, m, weights, capacity=capacity)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ws_core(cfg, features, m, weights):
+    return _ws_primal(cfg, features, m, weights)
+
+
+def _ws_fwd(cfg, features, m, weights):
+    return _ws_primal(cfg, features, m, weights), (features, m, weights)
+
+
+def _ws_bwd(cfg, res, g):
+    capacity, backend, _, _, self_t = cfg
+    features, m, weights = res
+    # Differentiate the function WS actually computed: drop overflow pairs
+    # from the map first, then transpose. The backward dF is the WS
+    # scatter-GEMM over the transposed map (Pallas: ws_scatter_gemm reads
+    # g and merges into the input-row accumulator).
+    mk = ws_kept_map(m, capacity)
+    # ``self_t`` can only skip the mirror scatter when the capacity is
+    # statically lossless (no drops possible ⇒ mk == m, symmetric); a
+    # dropped map is NOT its own transpose even on submanifold layers
+    # (the drop keeps *forward* column order).
+    if self_t and capacity >= m.shape[0]:
+        mt = mk
+    else:
+        mt = transpose_kernel_map(mk, n_in=features.shape[0])
+    # every transposed column holds ≤ capacity valid pairs (it mirrors a
+    # kept forward column), and ≤ min(M, N) by per-column injectivity — so
+    # this bound is lossless and keeps the backward's compaction/GEMM
+    # buffers at the tuned capacity, not M.
+    bw_cap = min(capacity, m.shape[0], features.shape[0])
+    df = _ws_primal((bw_cap, backend, 0, 0, self_t), g, mt,
+                    _grad_weights(weights))
+    dw = _dw_per_offset(features, mk, g, weights.dtype)
+    return df.astype(features.dtype), None, dw
+
+
+_ws_core.defvjp(_ws_fwd, _ws_bwd)
+
+
+@partial(jax.jit, static_argnames=("capacity", "backend", "bm", "bn",
+                                   "self_transpose"))
+def weight_stationary(
+    features: jax.Array,   # [N_cap, Cin]
+    m: jax.Array,          # int32 [M_cap, Ks]
+    weights: jax.Array,    # [Ks, Cin, Cout]
+    *,
+    capacity: int,
+    backend: str = "xla",
+    bm: int = 0,
+    bn: int = 0,
+    self_transpose: bool = False,
+) -> jax.Array:
+    """WS dataflow with static per-offset pair capacity (differentiable —
+    module doc).
+
+    Valid pairs beyond ``capacity`` are dropped (choose capacity from the
+    tuner / column statistics; ``capacity = M_cap`` is always lossless).
+    The per-offset compaction is the TPU replacement for the paper's
+    filtering post-processing; the merge replaces atomicAdd (see module
+    doc). Pallas: the fused compact+GEMM+merge kernel, same drop
+    semantics. The custom VJP transposes the *kept* map, so gradients are
+    exact for the dropped function too. ``self_transpose`` as in
+    :func:`output_stationary` (skips the backward mirror scatter, only
+    effective when the capacity is statically lossless)."""
+    return _ws_core((capacity, backend, bm, bn, self_transpose), features, m,
+                    weights)
 
 
 def ws_overflow(kmap: KernelMap, cols: np.ndarray, capacity: int) -> jax.Array:
@@ -171,22 +377,28 @@ def hybrid(
     backend: str = "xla",
     bm: int = 0,
     bn: int = 0,
+    self_transpose: bool = False,
 ) -> jax.Array:
     """Adaptive hybrid dataflow: offsets with L1 < t via OS, rest via WS.
 
     t = 0 degenerates to full WS; t = L1NormMax+1 to full OS (paper §5.4).
     ``backend`` selects the kernel family for both halves (module doc).
+    ``self_transpose`` propagates to both halves — valid because the
+    l1_partition subsets of a submanifold map are mirror-closed, hence
+    themselves self-transposed under positional reversal (module doc).
     """
     dense_idx, sparse_idx = l1_partition(K, stride, t)
     out = jnp.zeros((kmap.m.shape[0], weights.shape[-1]), features.dtype)
     if dense_idx.size:
         out = out + output_stationary(
             features, kmap.m[:, dense_idx], weights[dense_idx],
-            fuse=fuse_dense, backend=backend, bm=bm, bn=bn)
+            fuse=fuse_dense, backend=backend, bm=bm, bn=bn,
+            self_transpose=self_transpose)
     if sparse_idx.size:
         out = out + weight_stationary(
             features, kmap.m[:, sparse_idx], weights[sparse_idx],
-            capacity=ws_capacity, backend=backend, bm=bm, bn=bn)
+            capacity=ws_capacity, backend=backend, bm=bm, bn=bn,
+            self_transpose=self_transpose)
     return out
 
 

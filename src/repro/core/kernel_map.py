@@ -5,10 +5,19 @@ dataflow: per-offset kernel-map column density is tracked here, and the
 offset partition (dense → output-stationary, sparse → weight-stationary) is
 a *static*, host-side decision per layer (threshold t on the offset L1 norm),
 so the feature-computation graph is fully static for XLA.
+
+:func:`transpose_kernel_map` is the training-side use of the same symmetry
+identity that powers the §5.4 half-search (``zdelta.symmetrize_kernel_map``):
+``M[i, k] = j  ⇒  Mᵀ[j, mirror(k)] = i``. For a submanifold map the
+transposed map *is* the forward map; for rectangular (strided) maps one flat
+int32 scatter builds it — either way the backward pass of a sparse
+convolution needs **zero** new kernel-map searches (see ``dataflow``'s
+custom VJPs).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Tuple
 
 import jax
@@ -45,6 +54,46 @@ class KernelMap:
 
     def column_counts(self) -> jax.Array:
         return (self.m >= 0).sum(axis=0).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_in",))
+def transpose_kernel_map(m: jax.Array, *, n_in: int) -> jax.Array:
+    """Transposed (mirrored) kernel map: ``mt[j, mirror(k)] = i`` wherever
+    ``m[i, k] = j``, with ``mirror(k) = K³−1−k`` (offset δ → −δ under the
+    row-major z-delta column order).
+
+    This is the map the backward pass of a sparse convolution runs over:
+    ``m[i, k] = j`` means output i reads input j through offset δ_k, so
+    input j's cotangent reads output i's through −δ_k. ``n_in`` is the input
+    coordinate capacity (rows of the transposed map).
+
+    Cost: ONE flat int32 scatter over M·K³ entries — the rectangular
+    generalization of ``zdelta.symmetrize_kernel_map``'s mirror fill; no
+    search of any kind. Targets are collision-free because a kernel map is
+    per-column injective (distinct output voxels + one offset ⇒ distinct
+    input voxels). Invalid entries route out of bounds and drop.
+
+    For a submanifold layer (inputs == outputs) the §5.4 identity makes
+    ``transpose_kernel_map(m, n_in=M) == m`` — the forward map is its own
+    transpose — which is why training reuses the forward plan verbatim.
+
+    Precondition: ``m``'s columns must be a mirror-closed, offset-ordered
+    subset of the K³ grid (the full map, or an ``l1_partition`` subset) —
+    position reversal is only then the true δ → −δ mirror (see the
+    ``dataflow`` module doc's backward precondition).
+    """
+    mcap, k3 = m.shape
+    # flat scatter targets are j*k3 + mirror(k) in int32 — static guard
+    # against silent wraparound (would corrupt dF_in with no error)
+    assert (max(n_in, mcap) + 1) * k3 < 2 ** 31, (
+        f"transpose_kernel_map: {n_in}×{k3} flat index overflows int32")
+    rows = jnp.arange(mcap, dtype=jnp.int32)
+    mirror_cols = jnp.arange(k3 - 1, -1, -1, dtype=jnp.int32)
+    flat = jnp.where(m >= 0, m * k3 + mirror_cols[None, :], n_in * k3)
+    vals = jnp.broadcast_to(rows[:, None], (mcap, k3))
+    mt = jnp.full((n_in * k3,), -1, jnp.int32).at[flat.reshape(-1)].set(
+        vals.reshape(-1), mode="drop")
+    return mt.reshape(n_in, k3)
 
 
 def l1_partition(K: int, stride: int, t: int) -> Tuple[np.ndarray, np.ndarray]:

@@ -70,3 +70,38 @@ def dense_conv_reference(in_coords: np.ndarray, features: np.ndarray,
     # NB: the scalar batch index is itself an "advanced" index, so the
     # broadcasted (M,) dims land first: result is [M, cout].
     return np.asarray(out)[0, :, oc[:, 0], oc[:, 1], oc[:, 2]]
+
+
+def dense_conv_fn(in_coords: np.ndarray, out_coords: np.ndarray,
+                  K: int, stride: int):
+    """Differentiable dense oracle: ``fn(features, weights) -> [M, cout]``.
+
+    The jax-traceable twin of :func:`dense_conv_reference` — the scatter /
+    conv / gather indices are precomputed host-side from the static
+    coordinate lists, so the returned closure is a pure function of
+    (features, weights) that ``jax.grad`` can differentiate. This is the
+    gradient oracle for the engine's kernel-map-transposed custom VJPs
+    (tests/test_grad.py): like the forward oracles it shares none of the
+    engine's machinery (no packing, no kernel maps, no transposition).
+    """
+    lo = np.minimum(in_coords.min(0), out_coords.min(0)) - (K - 1) // 2 * stride
+    hi = np.maximum(in_coords.max(0), out_coords.max(0)) + (K - 1) // 2 * stride
+    shape = tuple((hi - lo + 1).astype(int))
+    ic = jnp.asarray(in_coords - lo)
+    oc = jnp.asarray(out_coords - lo)
+
+    def fn(features: jax.Array, weights: jax.Array) -> jax.Array:
+        cin = features.shape[1]
+        cout = weights.shape[2]
+        grid = jnp.zeros((1, cin, *shape), features.dtype)
+        # the scalar batch index is advanced, so the broadcasted (N,) dims
+        # land first: the indexed view is [N, cin], matching ``features``
+        grid = grid.at[0, :, ic[:, 0], ic[:, 1], ic[:, 2]].set(features)
+        w = weights.reshape(K, K, K, cin, cout).transpose(4, 3, 0, 1, 2)
+        out = jax.lax.conv_general_dilated(
+            grid, w, window_strides=(1, 1, 1), padding="SAME",
+            rhs_dilation=(stride, stride, stride),
+            dimension_numbers=("NCDHW", "OIDHW", "NCDHW"))
+        return out[0, :, oc[:, 0], oc[:, 1], oc[:, 2]]
+
+    return fn

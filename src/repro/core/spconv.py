@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dataflow import hybrid, output_stationary, weight_stationary
+from .dataflow import (_mask_rows, bcast_rows, hybrid, output_stationary,
+                       weight_stationary)
 from .kernel_map import KernelMap, l1_norm_max
 
 Dataflow = Literal["os", "ws", "hybrid"]
@@ -46,6 +47,12 @@ class SpConvSpec:
                                   # ⌈K³/2⌉·M mirror scatter; the tuner
                                   # measures which side wins per platform
                                   # (scatter loses on CPU XLA, see tuner).
+    dense: bool = False           # caller statically guarantees the output
+                                  # level has count == capacity (no PAD
+                                  # rows), so the post-bias row mask is a
+                                  # wasted capacity-wide pass and is skipped.
+                                  # Only set when the plan's buffers are
+                                  # exact-sized (no bucketing/padding).
 
     @property
     def submanifold(self) -> bool:
@@ -78,17 +85,30 @@ def apply_spconv(params: dict, spec: SpConvSpec, features: jax.Array,
     ``kmap.out_count`` are zero."""
     w = params["w"].astype(features.dtype)
     cap = spec.ws_capacity or kmap.m.shape[0]
+    # submanifold ⇒ the kernel map is its own transpose (§5.4), so the
+    # custom VJPs skip the backward mirror scatter (dataflow module doc)
+    st = spec.submanifold
     if spec.dataflow == "os":
         out = output_stationary(features, kmap.m, w, fuse=spec.fuse_dense,
-                                backend=spec.backend, bm=spec.bm, bn=spec.bn)
+                                backend=spec.backend, bm=spec.bm, bn=spec.bn,
+                                self_transpose=st)
     elif spec.dataflow == "ws":
         out = weight_stationary(features, kmap.m, w, capacity=cap,
-                                backend=spec.backend, bm=spec.bm, bn=spec.bn)
+                                backend=spec.backend, bm=spec.bm, bn=spec.bn,
+                                self_transpose=st)
     else:
         out = hybrid(features, kmap, w, K=spec.K, stride=spec.offset_stride,
                      t=spec.t, ws_capacity=cap, fuse_dense=spec.fuse_dense,
-                     backend=spec.backend, bm=spec.bm, bn=spec.bn)
+                     backend=spec.backend, bm=spec.bm, bn=spec.bn,
+                     self_transpose=st)
     if spec.bias:
-        out = out + params["b"].astype(features.dtype)
-        out = jnp.where((jnp.arange(out.shape[0]) < kmap.out_count)[:, None], out, 0)
+        # dot-broadcast so autodiff's db row-reduction is a bit-invariant
+        # matmul (dataflow.bcast_rows doc)
+        out = out + bcast_rows(params["b"].astype(features.dtype),
+                               out.shape[0])
+        # PAD rows picked up the bias; zero them — unless the spec marks the
+        # level dense (count == capacity statically), where the mask is a
+        # wasted capacity-wide pass (parity in tests/test_dataflow_backends).
+        if not spec.dense:
+            out = _mask_rows(out, kmap.out_count)
     return out

@@ -46,6 +46,28 @@ from .packing import BitLayout, offset_grid, pack_offsets
 from .voxel import CoordSet, pad_value
 
 
+# ---------------------------------------------------------------------------
+# trace-time search-call counters
+# ---------------------------------------------------------------------------
+# Incremented in the (traced) bodies of the search entry points, so they
+# count how many kernel-map searches enter a compiled graph. The training
+# contract "the backward pass reuses the forward plan — zero extra searches
+# per train step" is asserted against these (tests/test_grad.py). Because
+# jit caches traces, call ``jax.clear_caches()`` before tracing the graphs
+# you want to compare.
+
+SEARCH_CALLS = {"count": 0}
+
+
+def reset_search_calls() -> None:
+    SEARCH_CALLS["count"] = 0
+
+
+def search_call_count() -> int:
+    """Kernel-map searches traced since the last reset (module doc above)."""
+    return SEARCH_CALLS["count"]
+
+
 def zdelta_offsets(K: int, stride: int, layout: BitLayout) -> tuple[np.ndarray, jax.Array, int]:
     """Static per-layer offset data: raw offsets [K^3,3] in z-delta group
     order, packed anchors [K^2], and the packed z step."""
@@ -73,6 +95,7 @@ def zdelta_search(
     first ``symmetry_anchor_count(K)`` anchors only. Padded output rows
     are −1.
     """
+    SEARCH_CALLS["count"] += 1
     arr = inputs.packed                       # [N] sorted, PAD-tailed
     n = arr.shape[0]
     pad = pad_value(arr.dtype)
@@ -111,6 +134,7 @@ def simple_bsearch(
     """Baseline from the paper's Fig. 10: one full binary search per query
     (|Vq|·K³ searches), packed-native, no pre-processing. Identical output
     layout to :func:`zdelta_search` when given group-ordered offsets."""
+    SEARCH_CALLS["count"] += 1
     arr = inputs.packed
     n = arr.shape[0]
     pad = pad_value(arr.dtype)

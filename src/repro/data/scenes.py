@@ -23,6 +23,8 @@ class Scene:
     coords: np.ndarray       # int32 [N, 3], unique, guard-biased, >= GUARD
     layout: BitLayout
     extent: tuple
+    labels: np.ndarray | None = None   # int32 [N] per-voxel class, aligned
+                                       # with coords (scene_batch(labels=True))
 
 
 def _unique(coords: np.ndarray, extent: np.ndarray) -> np.ndarray:
@@ -136,8 +138,27 @@ def _make_scene(kind: str, seed: int, extent: tuple, **kw) -> Scene:
     raise ValueError(f"unknown scene kind {kind!r}")
 
 
+def semantic_labels(coords: np.ndarray, extent: tuple,
+                    n_classes: int = 8) -> np.ndarray:
+    """Deterministic per-voxel segmentation labels from scene geometry.
+
+    Class ``n_classes−1`` is "boundary" (voxels hugging an x/y wall); the
+    remaining classes are height bands. Purely a function of the (guard-
+    biased) coordinates, so labels survive any sort/dedup of the voxel set
+    and are learnable from coordinate-derived features
+    (``train.pointcloud.scene_features``) — real-scan-like in being
+    geometric and class-imbalanced, without shipping a dataset."""
+    c = coords.astype(np.int64) - GUARD
+    bands = max(n_classes - 1, 1)
+    lab = np.clip((c[:, 2] * bands) // max(int(extent[2]), 1), 0, bands - 1)
+    wall = ((c[:, 0] <= 1) | (c[:, 1] <= 1)
+            | (c[:, 0] >= extent[0] - 2) | (c[:, 1] >= extent[1] - 2))
+    return np.where(wall, n_classes - 1, lab).astype(np.int32)
+
+
 def scene_batch(seed: int = 0, batch: int = 4, kind: str = "indoor",
                 extent: tuple = (64, 48, 24), overlap: float = 0.5,
+                labels: bool = False, n_classes: int = 8,
                 **kw) -> list:
     """A batch of scenes over ONE shared extent/layout with *controlled
     cross-scene overlap* — the multi-scene input the batched plan pipeline
@@ -153,6 +174,10 @@ def scene_batch(seed: int = 0, batch: int = 4, kind: str = "indoor",
     ``overlap=0`` gives fully independent scenes; ``overlap=1`` makes every
     scene a superset of the base. Single-scene generators
     (:func:`indoor_scene` etc.) are unchanged — this composes them.
+
+    ``labels=True`` attaches per-voxel segmentation targets
+    (:func:`semantic_labels` over ``n_classes``) to each scene — the
+    training subsystem's data contract (``train.pointcloud``).
     """
     assert 0.0 <= overlap <= 1.0, overlap
     rng = np.random.default_rng(seed)
@@ -162,9 +187,11 @@ def scene_batch(seed: int = 0, batch: int = 4, kind: str = "indoor",
         own = _make_scene(kind, seed + 101 + b, extent, **kw)
         keep = rng.random(len(base.coords)) < overlap
         coords = np.unique(np.concatenate([base.coords[keep], own.coords]),
-                           axis=0)
-        out.append(Scene(coords=coords.astype(np.int32), layout=base.layout,
-                         extent=base.extent))
+                           axis=0).astype(np.int32)
+        lab = (semantic_labels(coords, base.extent, n_classes)
+               if labels else None)
+        out.append(Scene(coords=coords, layout=base.layout,
+                         extent=base.extent, labels=lab))
     return out
 
 

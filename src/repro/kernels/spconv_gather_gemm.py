@@ -28,6 +28,12 @@ Cout % bn == 0; ``kernels.ops.spconv_os_fused`` pads M and picks tiles so
 arbitrary shapes work. Production note: the per-row DMAs are issued from a
 sequential loop — a double-buffered variant would overlap them with the
 MXU; on the CPU interpreter this is moot.
+
+Backward engine: the OS custom VJP (``core.dataflow``) runs this same
+kernel for dF_in — the operands become (cotangents g, the transposed
+kernel map ``kernel_map.transpose_kernel_map``, mirrored Cout→Cin
+weights), so training's backward is another implicit-GEMM gather with no
+``[N, Kd, Cout]`` intermediate and no new kernel-map search.
 """
 from __future__ import annotations
 

@@ -26,6 +26,12 @@ accumulator — the output block stays VMEM-resident across the whole sweep
 
 Accumulation is fp32 throughout (the output is fp32, cast by the caller),
 matching the XLA path bit-for-bit on valid rows in interpret mode.
+
+Backward engine: the WS custom VJP (``core.dataflow``) runs this same
+kernel for dF_in over the transposed kernel map (capacity-drop mask
+applied first, so gradients differentiate the dropped forward exactly) —
+the fused compact+GEMM+merge sweep scatters cotangent rows into the
+input-row accumulator the same way the forward scatters into output rows.
 """
 from __future__ import annotations
 

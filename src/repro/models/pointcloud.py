@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import (KernelMap, SpConvSpec, apply_spconv, init_spconv,
                         build_network_plan)
+from repro.core.dataflow import bcast_rows as _bcast_rows
 from repro.core.packing import BitLayout
 
 
@@ -139,10 +140,29 @@ def centerpoint_large(in_channels: int = 5, n_classes: int = 10,
                          n_classes)
 
 
+def tiny_segnet(in_channels: int = 4, n_classes: int = 8, width: int = 16,
+                depth: int = 4, dataflow: str = "os",
+                backend: str = "auto") -> PointCloudNet:
+    """A small all-submanifold segmentation net (stride-0 throughout, so
+    logits land on the INPUT coordinate set — the shape the per-voxel
+    training loss wants). The smoke-scale workload for
+    ``train.pointcloud`` / examples/train_pointcloud.py: big enough to
+    exercise BN + the custom-VJP dataflows at every layer, small enough to
+    train in seconds on CPU."""
+    specs: List[SpConvSpec] = [
+        SpConvSpec("stem", in_channels, width, K=3, m_in=0, m_out=0,
+                   dataflow=dataflow, backend=backend)]
+    for i in range(depth - 1):
+        specs.append(SpConvSpec(f"sub{i}", width, width, K=3, m_in=0, m_out=0,
+                                dataflow=dataflow, backend=backend))
+    return PointCloudNet("tiny_segnet", tuple(specs), in_channels, n_classes)
+
+
 NETWORKS = {
     "sparse_resnet21": sparse_resnet21,
     "minkunet42": minkunet42,
     "centerpoint_large": centerpoint_large,
+    "tiny_segnet": tiny_segnet,
 }
 
 
@@ -184,7 +204,7 @@ def _rowsum(x: jax.Array) -> jax.Array:
 
 def _relu_bn(x: jax.Array, count: jax.Array,
              seg: "tuple | None" = None) -> jax.Array:
-    """ReLU + masked feature standardization (BN stand-in), per scene.
+    """ReLU + masked feature standardization (train-mode BN), per scene.
 
     ``seg = (sid, starts, counts, S)`` describes the scene segmentation of
     this level's rows (scene id per row, each scene's first row and row
@@ -198,7 +218,15 @@ def _relu_bn(x: jax.Array, count: jax.Array,
     positions — and therefore the same operand grouping — as a single-scene
     run of any smaller capacity, with only zero rows appended. See
     :func:`_rowsum` for why that gives exact batched/looped identity.
-    """
+
+    Differentiable by design (the training subsystem's forward path uses
+    batch statistics, so gradients flow through mean/var): every broadcast
+    of a per-scene statistic is written as a matmul (:func:`_bcast_rows`,
+    and a one-hot [cap, S] matmul for the per-scene application) so that
+    autodiff's transposed reductions are dots with _rowsum's bit-invariance,
+    not elementwise reduce trees. A segment-sum formulation of the same
+    backward would be O(N) instead of S capacity-wide passes — ROADMAP
+    follow-up."""
     x = jax.nn.relu(x)
     cap = x.shape[0]
 
@@ -218,7 +246,9 @@ def _relu_bn(x: jax.Array, count: jax.Array,
     if seg is None or seg[3] == 1:
         mask = (jnp.arange(cap) < count)[:, None]
         mean, inv = stats(x, mask, count)
-        return jnp.where(mask, (x - mean) * inv, 0)
+        return jnp.where(mask,
+                         (x - _bcast_rows(mean, cap)) * _bcast_rows(inv, cap),
+                         0)
     sid, starts, counts, S = seg
     # Pad with a capacity of zeros so a slice starting anywhere in [0, cap]
     # never clamps (clamping would shift the alignment the proof needs).
@@ -231,8 +261,14 @@ def _relu_bn(x: jax.Array, count: jax.Array,
         means.append(mean)
         invs.append(inv)
     sid_c = jnp.clip(sid, 0, S - 1)
-    mean_r = jnp.stack(means)[sid_c]
-    inv_r = jnp.stack(invs)[sid_c]
+    # Scene-wise application as a one-hot matmul (row j reads scene sid[j]'s
+    # stats as Σ_s 1[s == sid[j]]·stat_s — exact: one real term plus exact
+    # zeros). Backward: d(stats) = onehotᵀ @ g, a [S, cap] @ [cap, C] dot —
+    # the bit-invariant segment reduction; a gather here would transpose to
+    # an XLA scatter-add instead.
+    onehot = (sid_c[:, None] == jnp.arange(S)[None, :]).astype(x.dtype)
+    mean_r = jnp.dot(onehot, jnp.stack(means))
+    inv_r = jnp.dot(onehot, jnp.stack(invs))
     valid = (sid < S)[:, None]
     return jnp.where(valid, (x - mean_r) * inv_r, 0)
 

@@ -19,8 +19,9 @@ indexing/caches, zero per-request compilation):
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -68,9 +69,20 @@ class PointCloudServeEngine:
     session once, and scatters per-scene logits back onto the requests.
     A partially full batch is fine (unused scene slots simply don't occur
     in the coordinate set); a single request still gets a correct answer.
+
+    Latency bail-out: a live serving loop wants to hold a partial batch
+    briefly hoping more requests arrive (batching amortizes dispatch), but
+    never longer than its latency budget. ``step(max_wait=s)`` implements
+    that policy: it dispatches immediately once the batch is full, holds
+    (returns ``[]``) while the *oldest* queued request has waited less than
+    ``s`` seconds, and dispatches the partial batch as soon as it has —
+    a lone request is answered within the bound instead of blocking forever
+    on a batch that will never fill. ``max_wait=None`` keeps the legacy
+    dispatch-whatever-is-queued behavior.
     """
 
-    def __init__(self, session, max_batch: Optional[int] = None):
+    def __init__(self, session, max_batch: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
         from .session import SpiraSession
 
         if not isinstance(session, SpiraSession):
@@ -82,18 +94,32 @@ class PointCloudServeEngine:
         self.max_batch = min(max_batch or session.num_scenes,
                              session.num_scenes)
         self.pending: deque[PointCloudRequest] = deque()
+        self._arrivals: deque[float] = deque()   # clock() at submit, aligned
+        self._clock = clock                      # injectable for tests
         self.batches_run = 0
         self.scenes_served = 0
 
     def submit(self, req: PointCloudRequest) -> None:
         self.pending.append(req)
+        self._arrivals.append(self._clock())
 
-    def step(self) -> List[PointCloudRequest]:
-        """Serve one batch (up to ``max_batch`` queued requests)."""
-        batch = [self.pending.popleft()
-                 for _ in range(min(self.max_batch, len(self.pending)))]
-        if not batch:
+    def step(self, max_wait: Optional[float] = None
+             ) -> List[PointCloudRequest]:
+        """Serve one batch (up to ``max_batch`` queued requests).
+
+        ``max_wait``: hold a partial batch (return ``[]``, serve nothing)
+        until the oldest queued request has waited this many seconds, then
+        dispatch whatever is queued (class doc). ``None`` dispatches
+        immediately."""
+        if not self.pending:
             return []
+        if (max_wait is not None and len(self.pending) < self.max_batch
+                and self._clock() - self._arrivals[0] < max_wait):
+            return []
+        batch = []
+        for _ in range(min(self.max_batch, len(self.pending))):
+            batch.append(self.pending.popleft())
+            self._arrivals.popleft()
         st = SparseTensor.from_point_clouds(
             [(r.coords, r.features) for r in batch], self.session.layout)
         out = self.session(st)

@@ -17,6 +17,12 @@ so the hot path is a single call::
     out = session(SparseTensor.from_point_clouds(clouds, session.layout))
     per_scene = out.unbatch()
 
+Training shares the front door: ``session.compile_train()`` returns a
+:class:`~repro.train.PointCloudTrainer` whose fused
+plan→forward→loss→grad→update step runs under the same bucketing and
+updates ``session.params`` in place (backward reuses the forward plan via
+the kernel-map-transposed VJPs — ``train.pointcloud`` module doc).
+
 The jit cache *is* the bucket cache: the session pads every input to its
 power-of-two capacity bucket, so all requests in a bucket hit one compiled
 executable and ``session.compile_count`` == number of distinct buckets seen
@@ -137,6 +143,21 @@ class SpiraSession:
         # input set only for submanifold-ending segmentation nets).
         return SparseTensor(features=logits, packed=out_packed,
                             count=out_count, layout=self.layout)
+
+    def compile_train(self, tcfg=None, *, opt_state=None):
+        """Training entry point: a :class:`~repro.train.PointCloudTrainer`
+        bound to this session.
+
+        The trainer fuses plan→forward→loss→grad→update into one jitted
+        graph per capacity bucket (the same pow2 bucketing as inference —
+        its jit cache is its bucket cache) and updates ``self.params`` in
+        place each step, so the session serves the trained weights
+        immediately. The backward pass reuses the forward plan via the
+        kernel-map-transposed custom VJPs in ``core.dataflow`` — zero extra
+        kernel-map searches per step (``train.pointcloud`` module doc).
+        """
+        from repro.train.pointcloud import PointCloudTrainer
+        return PointCloudTrainer(self, tcfg, opt_state=opt_state)
 
     def plan(self, st: SparseTensor) -> NetworkPlan:
         """The network plan the session would use for ``st`` (bucketed) —

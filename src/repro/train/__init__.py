@@ -1,3 +1,7 @@
 from .optimizer import AdamWConfig, OptState, init_opt_state, apply_updates
 from .loop import TrainConfig, make_train_step, train
+from .pointcloud import (PointCloudTrainConfig, PointCloudTrainer,
+                         labeled_batch, labeled_tensor,
+                         make_pointcloud_train_step, scene_features,
+                         segmentation_loss)
 from . import compression

@@ -1,0 +1,271 @@
+"""Differentiable Spira: the point-cloud training subsystem.
+
+Spira's thesis — indexing and computation decouple, and the kernel map is a
+*symmetric* object — makes training almost free to add on top of the
+serving engine:
+
+* **One plan per step, shared by forward and backward.** The kernel-map
+  transposition identity ``M[i,k] = j ⇒ Mᵀ[j, mirror(k)] = i`` means the
+  backward pass of every sparse convolution runs over (a mirror-scatter of)
+  the *forward* kernel map — ``core.dataflow``'s custom VJPs perform zero
+  additional kernel-map searches (asserted via ``core.zdelta``'s search
+  counters in tests/test_grad.py). TorchSparse (Tang et al., 2022) trains
+  on the same transposed-map identity on GPU; Minuet (Yang et al., 2024)
+  shows kernel-map cost amortizing across steps — here the whole
+  plan→forward→loss→grad→update chain is ONE jitted graph per capacity
+  bucket, built by :func:`make_pointcloud_train_step` and owned by
+  ``SpiraSession.compile_train``.
+
+* **Same engines both directions.** The fused Pallas kernels
+  (``kernels/spconv_gather_gemm``, ``kernels/ws_scatter_gemm``) are the
+  backward's engines too, so training never materializes the
+  ``[M, Kd, Cin]`` gathered intermediate that forward already avoids.
+
+* **Same bucketing as inference.** :class:`PointCloudTrainer` pads every
+  batch to the session's pow2 capacity bucket; the train-step jit cache is
+  the bucket cache, exactly like inference.
+
+Data contract: per-voxel class labels aligned with the raw point cloud
+(``data.scenes.scene_batch(labels=True)``). :func:`labeled_tensor` carries
+labels through SparseTensor's sort/dedup by riding them in as an extra
+feature column, so label rows always match packed-coordinate rows. The
+loss is masked cross-entropy over the valid prefix (PAD rows carry
+``ignore_label``); it requires the network's output level to equal its
+input level (submanifold-ending segmentation nets — e.g.
+``models.pointcloud.tiny_segnet`` or ``minkunet42``), since that is what
+makes logits land on the labeled coordinate set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_network_plan
+from repro.core.packing import BitLayout
+from repro.core.sparse_tensor import SparseTensor, ensure_sparse_tensor
+from repro.data.scenes import GUARD, Scene
+from repro.models.pointcloud import PointCloudNet, pointcloud_forward
+from .optimizer import AdamWConfig, OptState, apply_updates, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class PointCloudTrainConfig:
+    """Static training configuration for the point-cloud subsystem.
+
+    ``opt`` reuses the LM stack's sharded AdamW (``train.optimizer``); the
+    defaults here are sized for the smoke-scale segmentation task (short
+    schedule, no weight decay — BN has no affine params to exempt)."""
+
+    opt: AdamWConfig = dataclasses.field(default_factory=lambda: AdamWConfig(
+        lr=1e-2, warmup_steps=5, total_steps=2000, weight_decay=0.0))
+    ignore_label: int = -1
+
+    def __post_init__(self):
+        if self.ignore_label >= 0:
+            raise ValueError(
+                f"ignore_label must be negative (got {self.ignore_label}): "
+                "segmentation_loss masks rows by label < 0, so a non-"
+                "negative ignore value would make PAD/bucket-padding rows "
+                "train as real voxels. Remap a 255-style ignore convention "
+                "to -1 in your label pipeline.")
+
+
+# ---------------------------------------------------------------------------
+# data plumbing: labels through the packing step
+# ---------------------------------------------------------------------------
+
+def scene_features(scene: Scene, channels: int = 4) -> np.ndarray:
+    """Coordinate-derived input features: normalized (x, y, z) + a constant
+    channel, tiled/trimmed to ``channels``. Deterministic, so the geometric
+    signal ``scenes.semantic_labels`` encodes is linearly present in the
+    inputs — the smoke task is genuinely learnable, not noise-fitting."""
+    c = (scene.coords.astype(np.float32) - GUARD) / np.asarray(
+        scene.extent, np.float32)
+    base = np.concatenate([c, np.ones((len(c), 1), np.float32)], axis=1)
+    reps = -(-channels // base.shape[1])
+    return np.tile(base, (1, reps))[:, :channels].astype(np.float32)
+
+
+def labeled_tensor(clouds: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+                   layout: BitLayout, *,
+                   capacity: Optional[int] = None,
+                   ignore_label: int = -1
+                   ) -> Tuple[SparseTensor, jax.Array]:
+    """Pack B labeled scenes — ``[(coords, features, labels), ...]`` — into
+    one batched SparseTensor plus a row-aligned label vector.
+
+    Labels ride through the constructor's sort/dedup as an extra feature
+    column (exact for class ids < 2²⁴ in fp32), then split back out; PAD
+    rows get ``ignore_label``. This is the only correct way to keep labels
+    aligned: SparseTensor reorders rows host-side and nothing downstream
+    may re-sort.
+    """
+    if ignore_label >= 0:
+        raise ValueError(f"ignore_label must be negative (got "
+                         f"{ignore_label}) — the loss masks rows by "
+                         "label < 0 (PointCloudTrainConfig doc).")
+    aug = []
+    for coords, feats, labels in clouds:
+        if len(labels) != len(coords):
+            raise ValueError(f"labels rows ({len(labels)}) must match coords "
+                             f"rows ({len(coords)})")
+        aug.append((coords, np.concatenate(
+            [np.asarray(feats, np.float32),
+             np.asarray(labels, np.float32)[:, None]], axis=1)))
+    st = SparseTensor.from_point_clouds(aug, layout, capacity=capacity)
+    n = int(st.count)
+    lab = np.rint(np.asarray(st.features[:, -1])).astype(np.int32)
+    lab[n:] = ignore_label
+    return (SparseTensor(features=st.features[:, :-1], packed=st.packed,
+                         count=st.count, layout=st.layout),
+            jnp.asarray(lab))
+
+
+def labeled_batch(batch: Sequence[Scene], layout: BitLayout, *,
+                  channels: int = 4, capacity: Optional[int] = None,
+                  ignore_label: int = -1) -> Tuple[SparseTensor, jax.Array]:
+    """``scene_batch(labels=True)`` output → (SparseTensor, labels), with
+    :func:`scene_features` as inputs. Convenience composition of
+    :func:`scene_features` + :func:`labeled_tensor`."""
+    for sc in batch:
+        if sc.labels is None:
+            raise ValueError("scene has no labels — generate the batch with "
+                             "data.scenes.scene_batch(..., labels=True)")
+    return labeled_tensor(
+        [(sc.coords, scene_features(sc, channels), sc.labels)
+         for sc in batch], layout, capacity=capacity,
+        ignore_label=ignore_label)
+
+
+# ---------------------------------------------------------------------------
+# loss + train step
+# ---------------------------------------------------------------------------
+
+def segmentation_loss(logits: jax.Array, labels: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Masked mean cross-entropy + accuracy over rows with ``label >= 0``.
+    Any negative label is ignored (PAD rows and bucket padding carry the
+    config's ``ignore_label``, which is validated negative)."""
+    valid = labels >= 0
+    lab = jnp.clip(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ce = -jnp.take_along_axis(logp, lab[:, None], axis=-1)[:, 0]
+    w = valid.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    loss = (ce * w).sum() / denom
+    acc = ((jnp.argmax(logp, axis=-1) == lab) * w).sum() / denom
+    return loss, acc
+
+
+def make_pointcloud_train_step(
+    net: PointCloudNet,
+    layout: BitLayout,
+    tcfg: PointCloudTrainConfig,
+    *,
+    engine: str = "zdelta",
+    downsample_method: str = "auto",
+) -> Callable:
+    """Build the fused plan→forward→loss→grad→update step.
+
+    Returns ``step(params, opt_state, packed, feats, labels) ->
+    (params, opt_state, metrics)`` — pure and jittable; one trace contains
+    the network plan (indexing), the feature pass, the masked loss, the
+    kernel-map-transposed backward and the AdamW update, so XLA schedules
+    indexing off the critical path for training exactly as it does for
+    inference, and the backward provably reuses the forward plan (module
+    doc)."""
+    specs = net.conv_specs()
+    in_level = specs[0].m_in if specs else 0
+    out_level = specs[-1].m_out if specs else 0
+    if out_level != in_level:
+        raise ValueError(
+            f"{net.name} ends at level {out_level} but its input is level "
+            f"{in_level}: per-voxel labels can't supervise coarser logits. "
+            "Train a submanifold-ending segmentation net (tiny_segnet, "
+            "minkunet42) or pool the labels to the output level yourself.")
+
+    def step(params, opt_state: OptState, packed, feats, labels):
+        def loss_fn(p):
+            plan = build_network_plan(packed, specs=specs, layout=layout,
+                                      engine=engine,
+                                      downsample_method=downsample_method)
+            logits = pointcloud_forward(p, net, plan, feats, layout=layout)
+            return segmentation_loss(logits, labels)
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state,
+                                                   tcfg.opt)
+        metrics.update(loss=loss, accuracy=acc)
+        return params, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# session-owned trainer
+# ---------------------------------------------------------------------------
+
+class PointCloudTrainer:
+    """Compiled training loop bound to a :class:`~repro.serve.SpiraSession`
+    — built by ``session.compile_train(...)``, not directly.
+
+    The trainer owns the optimizer state and mutates the session's params
+    in place on every :meth:`step`, so the same session serves the freshly
+    trained weights with zero hand-off. Inputs are bucketed with the
+    session's pow2 policy (labels padded with the ignore label), so
+    ``compile_count`` == distinct capacity buckets seen — the same
+    jit-cache-is-the-bucket-cache contract as inference.
+    """
+
+    def __init__(self, session, tcfg: Optional[PointCloudTrainConfig] = None,
+                 *, opt_state: Optional[OptState] = None):
+        self.session = session
+        self.tcfg = tcfg or PointCloudTrainConfig()
+        self.opt_state = opt_state if opt_state is not None else \
+            init_opt_state(session.params, self.tcfg.opt)
+        self._step = jax.jit(make_pointcloud_train_step(
+            session.net, session.layout, self.tcfg, engine=session.engine,
+            downsample_method=session.downsample_method))
+
+    def step(self, st: SparseTensor, labels) -> dict:
+        """One optimization step on a (batched) labeled SparseTensor.
+        Returns float metrics; updates ``session.params`` / ``opt_state``."""
+        ensure_sparse_tensor(st, where="PointCloudTrainer.step")
+        if st.layout != self.session.layout:
+            raise ValueError(
+                f"SparseTensor layout {st.layout} != session layout "
+                f"{self.session.layout} — build training batches against "
+                "session.layout (train.pointcloud.labeled_batch(batch, "
+                "session.layout)).")
+        labels = jnp.asarray(labels)
+        if labels.shape[0] != st.capacity:
+            raise ValueError(
+                f"labels rows ({labels.shape[0]}) != SparseTensor capacity "
+                f"({st.capacity}) — use train.pointcloud.labeled_tensor / "
+                "labeled_batch, which keep them aligned through sort/dedup.")
+        cap = self.session._bucket(st.capacity)
+        stp = st.pad_to(cap)
+        if cap != labels.shape[0]:
+            labels = jnp.concatenate([
+                labels, jnp.full((cap - labels.shape[0],),
+                                 self.tcfg.ignore_label, labels.dtype)])
+        params, self.opt_state, metrics = self._step(
+            self.session.params, self.opt_state, stp.packed, stp.features,
+            labels)
+        self.session.params = params
+        return {k: float(v) for k, v in metrics.items()}
+
+    @property
+    def compile_count(self) -> int:
+        """Compiled train-step executables — one per capacity bucket."""
+        cache_size = getattr(self._step, "_cache_size", None)
+        return int(cache_size()) if cache_size is not None else -1
+
+    def __repr__(self):
+        return (f"PointCloudTrainer({self.session.net.name}, "
+                f"step={int(self.opt_state.step)}, "
+                f"compiled_buckets={self.compile_count})")

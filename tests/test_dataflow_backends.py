@@ -125,6 +125,24 @@ def test_apply_spconv_backend_parity():
     np.testing.assert_array_equal(outs["xla"], outs["pallas"])
 
 
+def test_dense_spec_skips_mask_with_parity():
+    """``spec.dense`` skips the post-bias row mask; when the plan's buffers
+    are exact-sized (count == capacity — no PAD rows, the case the flag
+    asserts) the output must be bit-identical to the masked path."""
+    sc = scenes.indoor_scene(47, room=(40, 32, 16))
+    packed = scenes.pack_scene(sc)          # exact-sized: no PAD tail
+    base = SpConvSpec("l", 8, 16, K=3, m_in=0, m_out=0)
+    plan = build_network_plan(packed, specs=(base,), layout=sc.layout)
+    kmap = plan.kmaps["l"]
+    assert int(kmap.out_count) == kmap.m.shape[0]   # level genuinely dense
+    params = init_spconv(jax.random.key(3), base)
+    f = jax.random.normal(jax.random.key(4), (packed.shape[0], 8))
+    masked = apply_spconv(params, base, f, kmap)
+    skipped = apply_spconv(params, dataclasses.replace(base, dense=True), f,
+                           kmap)
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(skipped))
+
+
 # ---------------------------------------------------------------------------
 # zdelta_pallas indexing engine
 # ---------------------------------------------------------------------------

@@ -1,0 +1,275 @@
+"""Gradient correctness for the kernel-map-transposed custom VJPs.
+
+Three independent oracles, per the acceptance gate:
+
+* plain ``jax.grad`` through the raw XLA dataflows (``dataflow.os_xla`` /
+  ``ws_xla`` — no custom VJP), across K ∈ {3, 5}, stride-1 and stride-2
+  layers (submanifold at level 0 and 1, plus a true downsampling layer),
+  OS / WS / hybrid;
+* plain ``jax.grad`` through the dense-grid conv oracle
+  (``reference.dense_conv_fn`` — shares none of the engine's machinery);
+* central finite differences (directional, along the reported gradient —
+  f32 FD orthogonal to the gradient is pure cancellation noise).
+
+Plus the Pallas-vs-XLA *backward* bit-parity case in interpret mode: the
+fused kernels are the backward's engines, so their gradient outputs must be
+bit-identical to the XLA backward the same way their forward outputs are.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (hybrid, l1_partition, os_xla, output_stationary,
+                        transpose_kernel_map, weight_stationary, ws_kept_map,
+                        ws_xla, zdelta_offsets)
+from repro.core import reference
+from repro.core.voxel import build_coord_set, downsample
+from repro.core.zdelta import zdelta_search
+from repro.data import scenes
+
+
+def _relerr(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return np.abs(a - b).max() / max(1.0, np.abs(b).max())
+
+
+def _layer(K, m_in, m_out, seed=11):
+    """(kernel map, stride, in_capacity, out_capacity, scene) for one layer
+    shape: submanifold level-0 (stride 1), submanifold level-1 (stride 2),
+    or a downsampling layer (m_in=0 → m_out=1)."""
+    sc = scenes.indoor_scene(seed, room=(40, 32, 16))
+    layout = sc.layout
+    cs0 = build_coord_set(scenes.pack_scene(sc))
+    cs = {0: cs0}
+    for m in {m_in, m_out} - {0}:
+        cs[m] = downsample(cs0, layout, m)
+    stride = 1 << min(m_in, m_out)
+    _, anchors, zstep = zdelta_offsets(K, stride, layout)
+    m = zdelta_search(cs[m_in], cs[m_out], anchors, zstep, K=K)
+    return m, stride, cs[m_in].capacity, cs[m_out].capacity
+
+
+def _operands(m, n_in, K, seed=0, cin=4, cout=6):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.normal(size=(n_in, cin)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K ** 3, cin, cout)).astype(np.float32)) / 5
+    ct = jnp.asarray(rng.normal(size=(m.shape[0], cout)).astype(np.float32))
+    return f, w, ct
+
+
+# ---------------------------------------------------------------------------
+# transposed-map construction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_transpose_is_identity_on_submanifold_maps(K):
+    """§5.4 symmetry: a submanifold kernel map is its own transpose —
+    the reason training reuses the forward plan verbatim."""
+    m, _, n_in, _ = _layer(K, 0, 0)
+    mt = transpose_kernel_map(m, n_in=n_in)
+    np.testing.assert_array_equal(np.asarray(mt), np.asarray(m))
+
+
+def test_transpose_rectangular_bruteforce():
+    """Strided (rectangular) transpose against a dict brute force of the
+    defining identity mt[j, K³−1−k] = i ⇔ m[i, k] = j."""
+    K = 3
+    m, _, n_in, _ = _layer(K, 0, 1)
+    mt = np.asarray(transpose_kernel_map(m, n_in=n_in))
+    mn = np.asarray(m)
+    want = np.full((n_in, K ** 3), -1, np.int32)
+    for i in range(mn.shape[0]):
+        for k in range(K ** 3):
+            j = mn[i, k]
+            if j >= 0:
+                assert want[j, K ** 3 - 1 - k] == -1   # injectivity
+                want[j, K ** 3 - 1 - k] = i
+    np.testing.assert_array_equal(mt, want)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP vs autodiff of the raw XLA dataflows (the K/stride matrix)
+# ---------------------------------------------------------------------------
+
+# submanifold level 0 / level 1 (stride 2), downsample, UPSAMPLE (the
+# minkunet decoder's inverse-conv orientation), K=5
+LAYERS = [(3, 0, 0), (3, 1, 1), (3, 0, 1), (3, 1, 0), (5, 0, 0)]
+
+
+@pytest.mark.parametrize("K,m_in,m_out", LAYERS)
+@pytest.mark.parametrize("flow", ["os", "ws", "hybrid"])
+def test_custom_vjp_matches_xla_autodiff(flow, K, m_in, m_out):
+    m, stride, n_in, _ = _layer(K, m_in, m_out)
+    f, w, ct = _operands(m, n_in, K)
+    cap = int(np.asarray((m >= 0).sum(0)).max()) + 4
+
+    if flow == "os":
+        fn = lambda f, w: output_stationary(f, m, w, backend="xla")
+        ref = lambda f, w: os_xla(f, m, w)
+    elif flow == "ws":
+        fn = lambda f, w: weight_stationary(f, m, w, capacity=cap,
+                                            backend="xla")
+        ref = lambda f, w: ws_xla(f, m, w, capacity=cap)
+    else:
+        from repro.core import KernelMap
+        kmap = KernelMap(m=m, out_count=jnp.asarray(m.shape[0], jnp.int32),
+                         in_count=jnp.asarray(n_in, jnp.int32))
+        t = 2 * stride
+        fn = lambda f, w: hybrid(f, kmap, w, K=K, stride=stride, t=t,
+                                 ws_capacity=cap, backend="xla")
+        dense_idx, sparse_idx = l1_partition(K, stride, t)
+
+        def ref(f, w):
+            out = jnp.zeros((m.shape[0], w.shape[-1]), f.dtype)
+            if dense_idx.size:
+                out = out + os_xla(f, m[:, dense_idx], w[dense_idx])
+            if sparse_idx.size:
+                out = out + ws_xla(f, m[:, sparse_idx], w[sparse_idx],
+                                   capacity=cap)
+            return out
+
+    gf, gw = jax.grad(lambda f, w: (fn(f, w) * ct).sum(), argnums=(0, 1))(f, w)
+    rf, rw = jax.grad(lambda f, w: (ref(f, w) * ct).sum(), argnums=(0, 1))(f, w)
+    # dF is typically bit-equal (same per-offset fp32 sums, reordered only
+    # across offsets); dW sums the same products in row order instead of
+    # compacted order — 1e-6 of the gradient's scale covers the reorder.
+    assert _relerr(gf, rf) < 1e-6, _relerr(gf, rf)
+    assert _relerr(gw, rw) < 1e-6, _relerr(gw, rw)
+
+
+def test_ws_overflow_grads_differentiate_dropped_function():
+    """With capacity overflow, the VJP must differentiate the function WS
+    actually computes (pairs dropped), not the lossless one."""
+    K = 3
+    m, _, n_in, _ = _layer(K, 0, 0)
+    f, w, ct = _operands(m, n_in, K)
+    cap = int(np.asarray((m >= 0).sum(0)).max()) // 2 or 1
+    gf, gw = jax.grad(lambda f, w: (weight_stationary(
+        f, m, w, capacity=cap, backend="xla") * ct).sum(), argnums=(0, 1))(f, w)
+    rf, rw = jax.grad(lambda f, w: (ws_xla(f, m, w, capacity=cap)
+                                    * ct).sum(), argnums=(0, 1))(f, w)
+    assert _relerr(gf, rf) < 1e-6
+    assert _relerr(gw, rw) < 1e-6
+    # and the kept-map mask really dropped something (else this test is void)
+    assert int((np.asarray(ws_kept_map(m, cap)) >= 0).sum()) \
+        < int((np.asarray(m) >= 0).sum())
+
+
+# ---------------------------------------------------------------------------
+# custom VJP vs the dense-grid oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m_in,m_out", [(0, 0), (0, 1)])
+def test_custom_vjp_matches_dense_reference(m_in, m_out):
+    K, seed = 3, 13
+    sc = scenes.indoor_scene(seed, room=(40, 32, 16))
+    cs0 = build_coord_set(scenes.pack_scene(sc))
+    cs_out = cs0 if m_out == 0 else downsample(cs0, sc.layout, m_out)
+    _, anchors, zstep = zdelta_offsets(K, 1, sc.layout)
+    m = zdelta_search(cs0, cs_out, anchors, zstep, K=K)
+    n_in, n_out = int(cs0.count), int(cs_out.count)
+    f, w, ct = _operands(m, cs0.capacity, K)
+
+    in_coords = sc.coords
+    out_coords = (reference.downsample_reference(in_coords, m_out)
+                  if m_out else in_coords)
+    assert len(out_coords) == n_out
+    dense = reference.dense_conv_fn(in_coords, out_coords, K, 1)
+    fv = f[:n_in]
+    rf, rw = jax.grad(lambda fv, w: (dense(fv, w) * ct[:n_out]).sum(),
+                      argnums=(0, 1))(fv, w)
+
+    def ours(fv, w):
+        fp = jnp.zeros_like(f).at[:n_in].set(fv)
+        return (output_stationary(fp, m, w, backend="xla")
+                * ct * (jnp.arange(m.shape[0]) < n_out)[:, None]).sum()
+
+    gf, gw = jax.grad(ours, argnums=(0, 1))(fv, w)
+    assert _relerr(gf, rf) < 1e-6, _relerr(gf, rf)
+    assert _relerr(gw, rw) < 1e-6, _relerr(gw, rw)
+
+
+# ---------------------------------------------------------------------------
+# finite differences (directional, along the reported gradient)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flow", ["os", "ws"])
+def test_finite_differences(flow):
+    K = 3
+    m, _, n_in, _ = _layer(K, 0, 0)
+    f, w, ct = _operands(m, n_in, K)
+    cap = int(np.asarray((m >= 0).sum(0)).max()) + 4
+    if flow == "os":
+        L = lambda f, w: (output_stationary(f, m, w, backend="xla") * ct).sum()
+    else:
+        L = lambda f, w: (weight_stationary(f, m, w, capacity=cap,
+                                            backend="xla") * ct).sum()
+    gf, gw = jax.grad(L, argnums=(0, 1))(f, w)
+    eps = 1e-2
+    for g, arg in ((gf, 0), (gw, 1)):
+        v = g / jnp.linalg.norm(g)          # FD along the gradient: the
+        args = [f, w]                       # directional derivative is |g|,
+        args[arg] = args[arg] + eps * v     # far above f32 FD noise
+        hi = L(*args)
+        args = [f, w]
+        args[arg] = args[arg] - eps * v
+        lo = L(*args)
+        fd = float(hi - lo) / (2 * eps)
+        got = float((g * v).sum())
+        assert abs(fd - got) / max(abs(fd), 1e-6) < 1e-3, (flow, arg, fd, got)
+
+
+@pytest.mark.parametrize("flow", ["os", "ws", "hybrid"])
+def test_self_transpose_fast_path_bitwise(flow):
+    """``self_transpose=True`` (what apply_spconv sets for submanifold
+    layers) skips the backward mirror scatter; since the map IS its own
+    transpose there, gradients must be bit-identical to the general path."""
+    K = 3
+    m, stride, n_in, _ = _layer(K, 0, 0)
+    f, w, ct = _operands(m, n_in, K)
+    cap = m.shape[0]          # statically lossless: the WS skip's guard
+
+    def loss(st):
+        if flow == "os":
+            return lambda f, w: (output_stationary(
+                f, m, w, backend="xla", self_transpose=st) * ct).sum()
+        if flow == "ws":
+            return lambda f, w: (weight_stationary(
+                f, m, w, capacity=cap, backend="xla",
+                self_transpose=st) * ct).sum()
+        from repro.core import KernelMap
+        kmap = KernelMap(m=m, out_count=jnp.asarray(m.shape[0], jnp.int32),
+                         in_count=jnp.asarray(n_in, jnp.int32))
+        return lambda f, w: (hybrid(
+            f, kmap, w, K=K, stride=stride, t=2, ws_capacity=cap,
+            backend="xla", self_transpose=st) * ct).sum()
+
+    ga = jax.grad(loss(False), argnums=(0, 1))(f, w)
+    gb = jax.grad(loss(True), argnums=(0, 1))(f, w)
+    for a, b in zip(ga, gb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Pallas backward == XLA backward, bitwise (interpret mode off-TPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flow", ["os", "ws"])
+def test_backward_pallas_xla_bit_parity(flow):
+    K = 3
+    m, _, n_in, _ = _layer(K, 0, 0)
+    f, w, ct = _operands(m, n_in, K)
+    cap = int(np.asarray((m >= 0).sum(0)).max()) + 4
+
+    def loss(backend):
+        if flow == "os":
+            return lambda f, w: (output_stationary(
+                f, m, w, backend=backend) * ct).sum()
+        return lambda f, w: (weight_stationary(
+            f, m, w, capacity=cap, backend=backend) * ct).sum()
+
+    gx = jax.grad(loss("xla"), argnums=(0, 1))(f, w)
+    gp = jax.grad(loss("pallas"), argnums=(0, 1))(f, w)
+    for a, b in zip(gx, gp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

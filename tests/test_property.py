@@ -1,10 +1,24 @@
 """Hypothesis property-based tests on the engine's invariants."""
+import sys
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed")
+try:
+    import hypothesis  # noqa: F401  (gate only; strategies imported below)
+except ImportError as e:
+    # Announce the skip loudly at collection time: a bare importorskip makes
+    # property tests vanish silently from the CI log, and "the invariants
+    # were never property-checked" should be visible, not inferred from a
+    # skip count.
+    print(f"[test_property] SKIPPING all property tests at collection: "
+          f"hypothesis is not installed ({e}). The engine's invariants "
+          f"(packing order, offset additivity, z-delta == brute force) were "
+          f"NOT property-checked in this run.", file=sys.stderr, flush=True)
+    pytest.skip("hypothesis not installed", allow_module_level=True)
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BitLayout, build_coord_set, pack, pack_offsets,

@@ -1,0 +1,262 @@
+"""The differentiable training subsystem: loss descent, plan reuse,
+bucketing, label plumbing, checkpoint round-trip, serving bail-out."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.core import (build_network_plan, reset_search_calls,
+                        search_call_count)
+from repro.data import scenes
+from repro.models import pointcloud as pc
+from repro.serve import compile_network
+from repro.serve.engine import PointCloudRequest, PointCloudServeEngine
+from repro.train.pointcloud import (PointCloudTrainConfig, labeled_batch,
+                                    labeled_tensor, make_pointcloud_train_step,
+                                    scene_features)
+
+EXTENT = (32, 28, 16)
+N_CLASSES = 6
+
+
+def _setup(batch=2, seed=0, depth=3, width=8):
+    sb = scenes.scene_batch(seed=seed, batch=batch, kind="indoor",
+                            extent=EXTENT, labels=True, n_classes=N_CLASSES)
+    net = pc.tiny_segnet(in_channels=4, n_classes=N_CLASSES, width=width,
+                         depth=depth)
+    session = compile_network(net, sb[0].layout, batch=batch)
+    st, lab = labeled_batch(sb, session.layout)
+    return sb, net, session, st, lab
+
+
+def test_train_step_reduces_loss_and_serves():
+    _, _, session, st, lab = _setup()
+    trainer = session.compile_train(PointCloudTrainConfig())
+    m0 = trainer.step(st, lab)
+    for _ in range(24):
+        m = trainer.step(st, lab)
+    assert m["loss"] < m0["loss"], (m0, m)
+    assert m["accuracy"] > m0["accuracy"]
+    # the session serves the trained params immediately (same object)
+    out = session(st)
+    assert bool(np.isfinite(np.asarray(out.features)[: int(out.count)]).all())
+
+
+def test_labels_survive_sort_dedup():
+    """labeled_tensor must keep labels row-aligned through SparseTensor's
+    host-side sort/dedup: recomputing the geometric labels from the packed
+    rows' coordinates must reproduce the carried labels exactly."""
+    sb, _, session, st, lab = _setup()
+    coords, sids = st.coords()
+    want = scenes.semantic_labels(coords, EXTENT, N_CLASSES)
+    n = int(st.count)
+    np.testing.assert_array_equal(np.asarray(lab)[:n], want)
+    assert (np.asarray(lab)[n:] == -1).all()
+
+
+def test_shuffled_cloud_same_labels():
+    """Row order of the raw cloud must not matter (the constructor sorts)."""
+    sb = scenes.scene_batch(seed=3, batch=1, kind="indoor", extent=EXTENT,
+                            labels=True, n_classes=N_CLASSES)[0]
+    feats = scene_features(sb)
+    perm = np.random.default_rng(0).permutation(len(sb.coords))
+    st_a, lab_a = labeled_tensor([(sb.coords, feats, sb.labels)], sb.layout)
+    st_b, lab_b = labeled_tensor(
+        [(sb.coords[perm], feats[perm], sb.labels[perm])], sb.layout)
+    np.testing.assert_array_equal(np.asarray(st_a.packed),
+                                  np.asarray(st_b.packed))
+    np.testing.assert_array_equal(np.asarray(lab_a), np.asarray(lab_b))
+    np.testing.assert_array_equal(np.asarray(st_a.features),
+                                  np.asarray(st_b.features))
+
+
+def test_backward_adds_zero_searches():
+    """The acceptance gate's plan-reuse claim: tracing the full
+    plan→forward→loss→grad→update step enters exactly as many kernel-map
+    searches into the graph as tracing the forward plan alone — the
+    backward contributes none (it runs over transposed maps, built by a
+    scatter). Steady-state steps trace nothing at all."""
+    _, net, session, st, lab = _setup(depth=2)
+    stp = st.pad_to(session._bucket(st.capacity))
+    labp = jnp.concatenate([lab, jnp.full(
+        (stp.capacity - lab.shape[0],), -1, lab.dtype)]) \
+        if stp.capacity != lab.shape[0] else lab
+    specs = net.conv_specs()
+    layout = session.layout
+
+    def plan_only(packed):
+        return build_network_plan(packed, specs=specs, layout=layout,
+                                  engine="zdelta", downsample_method="auto")
+
+    jax.clear_caches()
+    reset_search_calls()
+    jax.make_jaxpr(plan_only)(stp.packed)
+    n_plan = search_call_count()
+    assert n_plan > 0
+
+    tcfg = PointCloudTrainConfig()
+    step = make_pointcloud_train_step(net, layout, tcfg)
+    params = session.params
+    from repro.train import init_opt_state
+    opt = init_opt_state(params, tcfg.opt)
+    jax.clear_caches()
+    reset_search_calls()
+    jax.make_jaxpr(step)(params, opt, stp.packed, stp.features, labp)
+    n_step = search_call_count()
+    assert n_step == n_plan, (n_step, n_plan)
+
+    # compiled steady state: a second call of the jitted step traces nothing
+    jstep = jax.jit(step)
+    jax.block_until_ready(jstep(params, opt, stp.packed, stp.features, labp))
+    reset_search_calls()
+    jax.block_until_ready(jstep(params, opt, stp.packed, stp.features, labp))
+    assert search_call_count() == 0
+
+
+def test_trainer_bucket_cache():
+    """Two input sizes in the same pow2 bucket → one compiled step; a size
+    in a new bucket → two (the jit cache is the bucket cache, like
+    inference)."""
+    sb, net, session, st, lab = _setup()
+    trainer = session.compile_train()
+    trainer.step(st, lab)
+    assert trainer.compile_count == 1
+    # same bucket, smaller count: reuse
+    small = scenes.scene_batch(seed=9, batch=2, kind="indoor", extent=EXTENT,
+                               labels=True, n_classes=N_CLASSES)
+    st2, lab2 = labeled_batch(small, session.layout)
+    assert session._bucket(st2.capacity) == session._bucket(st.capacity)
+    trainer.step(st2, lab2)
+    assert trainer.compile_count == 1
+
+
+def test_grads_zero_extension_invariant():
+    """The bit-invariance contract extends to the backward: padding the
+    input to a larger capacity bucket must not change the parameter
+    gradients by an ulp. This is what the dot-structured BN backward
+    (models.pointcloud._bcast_rows / the one-hot matmul) and the matmul
+    reductions in dW buy."""
+    sb = scenes.scene_batch(seed=5, batch=1, kind="indoor", extent=EXTENT,
+                            labels=True, n_classes=N_CLASSES)
+    net = pc.tiny_segnet(in_channels=4, n_classes=N_CLASSES, width=8, depth=2)
+    layout = sb[0].layout
+    tcfg = PointCloudTrainConfig()
+    st, lab = labeled_batch(sb, layout)
+    params = pc.init_pointcloud(jax.random.key(0), net)
+    specs = net.conv_specs()
+
+    def grads_at(cap):
+        stp = st.pad_to(cap)
+        labp = jnp.concatenate([lab, jnp.full((cap - lab.shape[0],), -1,
+                                              lab.dtype)])
+
+        def loss_fn(p):
+            plan = build_network_plan(stp.packed, specs=specs, layout=layout)
+            logits = pc.pointcloud_forward(p, net, plan, stp.features,
+                                           layout=layout)
+            from repro.train.pointcloud import segmentation_loss
+            return segmentation_loss(logits, labp)[0]
+
+        return jax.grad(loss_fn)(params)
+
+    cap0 = ((st.capacity + 127) // 128) * 128
+    g_a = grads_at(cap0)
+    g_b = grads_at(cap0 * 2)
+    for a, b in zip(jax.tree.leaves(g_a), jax.tree.leaves(g_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_roundtrip(tmp_path):
+    """Trained params + optimizer state round-trip through ckpt.manager
+    bit-exactly, and the restored trainer continues identically."""
+    _, _, session, st, lab = _setup()
+    trainer = session.compile_train()
+    for _ in range(3):
+        trainer.step(st, lab)
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=False)
+    mgr.save(3, session.params, trainer.opt_state)
+
+    p2, o2, step = mgr.restore(None, session.params, trainer.opt_state)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(session.params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # continue-from-restore == continue-in-place, bitwise
+    m_live = trainer.step(st, lab)
+    session.params = p2
+    trainer.opt_state = o2
+    m_restored = trainer.step(st, lab)
+    assert m_live["loss"] == m_restored["loss"]
+
+
+def test_train_step_rejects_coarse_output_net():
+    sb = scenes.scene_batch(seed=0, batch=1, kind="indoor", extent=EXTENT,
+                            labels=True)
+    net = pc.sparse_resnet21(in_channels=4, n_classes=8)   # ends level 3
+    with pytest.raises(ValueError, match="per-voxel labels"):
+        make_pointcloud_train_step(net, sb[0].layout, PointCloudTrainConfig())
+
+
+# ---------------------------------------------------------------------------
+# serving bail-out (async partial-batch dispatch)
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_engine_max_wait_dispatches_partial_batch():
+    """A lone request must be answered once it has waited max_wait, even
+    though the batch never fills — and must NOT dispatch before that."""
+    sb = scenes.scene_batch(seed=1, batch=4, kind="indoor", extent=EXTENT)
+    net = pc.tiny_segnet(in_channels=4, n_classes=4, width=8, depth=2)
+    session = compile_network(net, sb[0].layout, batch=4)
+    clock = _FakeClock()
+    eng = PointCloudServeEngine(session, clock=clock)
+
+    rng = np.random.default_rng(0)
+    req = PointCloudRequest(
+        coords=sb[0].coords,
+        features=rng.normal(size=(len(sb[0].coords), 4)).astype(np.float32))
+    eng.submit(req)
+    assert eng.step(max_wait=0.5) == []        # young request: hold
+    assert not req.done
+    clock.t = 0.49
+    assert eng.step(max_wait=0.5) == []        # still inside the bound
+    clock.t = 0.51
+    served = eng.step(max_wait=0.5)            # bound exceeded: bail out
+    assert [req] == served and req.done
+    assert req.logits is not None and len(req.logits) == int(
+        np.unique(req.coords, axis=0).shape[0])
+
+    # wall-clock sanity: with a real clock a lone request is answered
+    # within (roughly) the bound, not blocked on batch fill
+    import time
+    eng2 = PointCloudServeEngine(session)
+    req2 = PointCloudRequest(coords=req.coords, features=req.features)
+    eng2.submit(req2)
+    t0 = time.monotonic()
+    while not req2.done:
+        eng2.step(max_wait=0.05)
+        assert time.monotonic() - t0 < 30     # compile headroom, not policy
+    assert req2.done
+
+
+def test_engine_full_batch_dispatches_immediately():
+    sb = scenes.scene_batch(seed=2, batch=2, kind="indoor", extent=EXTENT)
+    net = pc.tiny_segnet(in_channels=4, n_classes=4, width=8, depth=2)
+    session = compile_network(net, sb[0].layout, batch=2)
+    clock = _FakeClock()
+    eng = PointCloudServeEngine(session, clock=clock)
+    rng = np.random.default_rng(1)
+    for sc in sb:
+        eng.submit(PointCloudRequest(
+            coords=sc.coords,
+            features=rng.normal(size=(len(sc.coords), 4)).astype(np.float32)))
+    served = eng.step(max_wait=10.0)           # full batch: no hold at t=0
+    assert len(served) == 2 and all(r.done for r in served)
