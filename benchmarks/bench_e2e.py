@@ -8,7 +8,8 @@ pass fused in one jitted graph) costs nothing over the hand-stitched
 same bucketed capacity so the comparison is graph-vs-graph, not
 padding-vs-no-padding. Batching B scenes into one call amortizes per-call
 dispatch/compile overhead; on a compute-bound CPU host the batched graph is
-work-dominated (per-scene BN segmentation adds S capacity-wide passes), so
+work-dominated (per-scene BN now costs O(N) via the segmented-reduction
+engine, independent of S, but the conv work itself is what dominates), so
 the ``batch_amortization`` row is the quantity to watch on real TPUs, not
 here.
 

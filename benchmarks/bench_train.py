@@ -16,6 +16,15 @@ Quantities under test, per engine:
   backward-side re-index would double this share.
 * ``steps_to_amortize_compile`` — compile cost of the fused train graph
   over the steady-state step, the plan-ahead trade training buys into.
+* per-stage BN breakdown — ``bn_us_segment`` vs ``bn_us_sliced`` times one
+  level-0 BN application (fwd + bwd, the stage's full train-step cost)
+  under the O(N) segment engine vs the retired O(S·cap) sliced
+  formulation, at the session's real scene segmentation (S = batch = 4,
+  the acceptance regime). ``bn_share_of_step`` projects the segment
+  engine's BN stage over all layers against the measured step;
+  ``bn_share_of_step_sliced`` is the same projection for the sliced
+  baseline — the gap is what the segmented-reduction engine removed from
+  the step.
 
 Off-TPU the ``zdelta_pallas`` row times the Pallas interpreter (relative
 cost only, see benchmarks/common.py) and is restricted to smoke size.
@@ -28,6 +37,7 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data import scenes
@@ -39,8 +49,29 @@ from .common import emit, timeit, us
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "BENCH_train.json")
 
 
+def _bn_stage_times(session, st, width):
+    """(t_segment, t_sliced): one level-0 BN application, fwd + bwd, at the
+    session's real scene segmentation."""
+    plan = session.plan(st)
+    seg0 = pc.level_segments(plan, session.layout)[0]
+    cap0 = plan.coords[0].capacity
+    count0 = plan.coords[0].count
+    x = jax.random.normal(jax.random.key(3), (cap0, width))
+
+    def seg_loss(v):
+        return jnp.vdot(pc._relu_bn(v, count0, seg0,
+                                    segment=session.segment), v)
+
+    def sliced_loss(v):
+        return jnp.vdot(pc._relu_bn_sliced(v, count0, seg0), v)
+
+    t_seg = timeit(jax.jit(jax.grad(seg_loss)), x, repeats=5, warmup=1)
+    t_sliced = timeit(jax.jit(jax.grad(sliced_loss)), x, repeats=5, warmup=1)
+    return t_seg, t_sliced
+
+
 def run(smoke: bool = False):
-    B = 2
+    B = 4           # S >= 4: the regime the segment engine is priced in
     extent = (48, 40, 24) if smoke else (64, 48, 24)
     n_classes = 8
     batch = scenes.scene_batch(seed=0, batch=B, kind="indoor", extent=extent,
@@ -65,14 +96,23 @@ def run(smoke: bool = False):
         t_fwd = timeit(lambda: session(st).features, repeats=5, warmup=1)
         t_plan = timeit(lambda: session.plan(st).coords[0].packed,
                         repeats=5, warmup=1)
+        t_bn_seg, t_bn_sliced = _bn_stage_times(session, st,
+                                                net.specs[0].cout)
+        n_bn = len(net.specs)
 
         rec = {
             "voxels": int(st.count),
+            "scenes": B,
             "plan_us": us(t_plan),
             "fwd_us": us(t_fwd),
             "step_us": us(t_step),
             "bwd_over_fwd": round(t_step / t_fwd, 3),
             "plan_share_of_step": round(t_plan / t_step, 3),
+            "bn_us_segment": us(t_bn_seg),
+            "bn_us_sliced": us(t_bn_sliced),
+            "segment_vs_sliced_bn": round(t_bn_sliced / t_bn_seg, 2),
+            "bn_share_of_step": round(n_bn * t_bn_seg / t_step, 3),
+            "bn_share_of_step_sliced": round(n_bn * t_bn_sliced / t_step, 3),
             "compile_s": round(compile_s, 2),
             "steps_to_amortize_compile": round(compile_s / t_step, 1),
         }
@@ -82,6 +122,10 @@ def run(smoke: bool = False):
         rows.append((f"train/{engine}/fwd", us(t_fwd), ""))
         rows.append((f"train/{engine}/step", us(t_step),
                      f"bwd_over_fwd={rec['bwd_over_fwd']}"))
+        rows.append((f"train/{engine}/bn_segment", us(t_bn_seg),
+                     f"share_of_step={rec['bn_share_of_step']}"))
+        rows.append((f"train/{engine}/bn_sliced", us(t_bn_sliced),
+                     f"segment_speedup={rec['segment_vs_sliced_bn']}"))
 
     rec = {
         "host_backend": jax.default_backend(),
@@ -91,7 +135,11 @@ def run(smoke: bool = False):
         "note": ("step = fused plan+forward+loss+grad+update at the session's "
                  "bucketed capacity; fwd = forward-only session call at the "
                  "same capacity; one plan serves both directions (transposed-"
-                 "map VJPs), so plan_share_of_step would double without it"),
+                 "map VJPs), so plan_share_of_step would double without it. "
+                 "bn_* rows price one level-0 BN stage (fwd+bwd) at S=4 "
+                 "scenes: segment = the O(N) segmented-reduction engine on "
+                 "the hot path, sliced = the retired O(S*cap) dynamic_slice "
+                 "+ one-hot formulation kept as baseline"),
         "engines": engines_rec,
     }
     hist = []

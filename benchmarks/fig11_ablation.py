@@ -1,6 +1,9 @@
 """Paper Fig. 11: incremental ablation of Spira's ideas on a (32,32,5)
 layer: (0) unpacked bsearch+OS → (1) packed-native bsearch+OS → (2) z-delta
-search+OS → (3) adaptive hybrid dataflow.
+search+OS → (3) adaptive hybrid dataflow → (4/5) per-scene BN: the retired
+O(S·cap) sliced formulation vs the O(N) segmented-reduction engine (the
+batched-serving ablation: same structured-coordinates argument applied to
+the per-scene statistics instead of the kernel-map search).
 
 The "unpacked" baseline searches 3-component coordinate rows
 lexicographically (the cost packed-native indexing removes)."""
@@ -14,6 +17,8 @@ from repro.core import (KernelMap, hybrid, offset_grid, output_stationary,
                         tune_threshold_cost_model, unpack, zdelta_offsets,
                         zdelta_search)
 from repro.core.voxel import pad_value
+from repro.kernels.segsum import segments_from_sizes
+from repro.models.pointcloud import _relu_bn, _relu_bn_sliced
 from .common import emit, prep, scene_set, timeit, us
 
 
@@ -98,6 +103,24 @@ def run():
     for label, t in [("0_unpacked_bsearch_os", t0), ("1_packed_bsearch_os", t1),
                      ("2_zdelta_os", t2), ("3_zdelta_hybrid", t3)]:
         rows.append((f"fig11/{label}", us(t), f"speedup_vs_base={base / t:.2f}"))
+
+    # steps 4/5: per-scene BN over the layer's rows at S=4 (a synthetic
+    # 4-scene contiguous segmentation of the valid prefix) — the sliced
+    # O(S·cap) formulation vs the segmented-reduction engine, fwd + bwd
+    S = 4
+    cap = cs.capacity
+    sizes = [n // S] * (S - 1) + [n - (S - 1) * (n // S)]
+    sid, starts, counts = segments_from_sizes(sizes, cap)
+    seg = (jnp.asarray(sid), jnp.asarray(starts), jnp.asarray(counts), S)
+    cnt = jnp.asarray(n, jnp.int32)
+    x_bn = jax.random.normal(jax.random.key(2), (cap, cin))
+    t4 = timeit(jax.jit(jax.grad(
+        lambda v: jnp.vdot(_relu_bn_sliced(v, cnt, seg), v))), x_bn, repeats=3)
+    t5 = timeit(jax.jit(jax.grad(
+        lambda v: jnp.vdot(_relu_bn(v, cnt, seg), v))), x_bn, repeats=3)
+    rows.append((f"fig11/4_bn_sliced_S{S}", us(t4), "fwd+bwd"))
+    rows.append((f"fig11/5_bn_segment_S{S}", us(t5),
+                 f"speedup_vs_sliced={t4 / t5:.2f}"))
     emit(rows)
     return rows
 

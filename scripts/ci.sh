@@ -31,6 +31,15 @@ python -m pytest -x -q \
   tests/test_plan_pipeline.py::test_superwindow_tiny_scene_smoke \
   tests/test_plan_pipeline.py::test_downsample_merge_tiny_count
 
+# segsum smoke: the segmented-reduction engine's Pallas kernel must stay
+# BIT-par with the XLA fallback, forward and backward (interpret mode) —
+# both implement one canonical grouping; plus the acceptance counters
+# (batched BN/pooling/loss trace zero sliced S-wide passes).
+python -m pytest -x -q \
+  "tests/test_segsum.py::test_pallas_matches_xla_bitwise[sizes1-8]" \
+  tests/test_segsum.py::test_pallas_backward_bit_parity \
+  tests/test_segsum.py::test_batched_step_has_no_sliced_passes
+
 # session smoke: batched bit-identity + bucket-cache contract on tiny nets
 python -m pytest -x -q \
   "tests/test_session.py::test_batched_bit_identity[2-3-zdelta]" \

@@ -9,11 +9,13 @@ from .zdelta import (zdelta_offsets, zdelta_search, zdelta_search_symmetric,
 from .kernel_map import (KernelMap, l1_partition, l1_norm_max, density_by_l1,
                          transpose_kernel_map)
 from .dataflow import (output_stationary, weight_stationary, hybrid,
-                       hbm_bytes_model, os_xla, ws_xla, ws_kept_map)
+                       hbm_bytes_model, os_xla, ws_xla, ws_kept_map,
+                       rowsum, bcast_rows, chunked_rowdot, rowdot_matmul)
 from .spconv import SpConvSpec, init_spconv, apply_spconv
 from .sparse_tensor import SparseTensor, ensure_sparse_tensor
 from .network_plan import NetworkPlan, build_network_plan, sequential_plan_fns, plan_levels
 from .tuner import (tune_threshold_measure, tune_threshold_cost_model,
                     candidate_ts, tune_layer_measure, tune_layer_cost_model,
                     plan_window, plan_superwindow, apply_tuning,
-                    LayerTuneResult)
+                    LayerTuneResult, SegmentTuneResult,
+                    tune_segment_backend_measure)

@@ -97,6 +97,36 @@ def _mask_rows(x: jax.Array, count: jax.Array) -> jax.Array:
     return jnp.where((jnp.arange(x.shape[0]) < count)[:, None], x, 0)
 
 
+def rowsum(x: jax.Array) -> jax.Array:
+    """Column sums as a ``[1, N] @ [N, C]`` matmul — the only *whole-buffer*
+    reduction we found whose result is **bitwise zero-extension invariant**
+    in practice.
+
+    The batched-vs-looped bit-identity contract needs: padding the buffer
+    with zero rows (a larger capacity bucket) must not change the sum by
+    even one ulp. ``jnp.sum`` regroups operands when the extent changes.
+    Hand-built elementwise reduction trees (halving adds, adjacent-pair
+    reshapes, with or without optimization_barriers) are mathematically
+    invariant but NOT in practice: embedded in a large jitted graph, XLA CPU
+    re-codegens the add chain per shape (fusion recomputation + FMA
+    contraction) and results drift by an ulp between capacity buckets —
+    observed and bisected on MinkUNet-42. A dot is a library call with
+    materialized operands and fixed k-panel blocking: the shared row prefix
+    is grouped identically at any N, and zero rows only append exact ``+0``
+    panel contributions. It is also the TPU-native choice (reductions ride
+    the MXU).
+
+    This is the single home of the bit-invariant reduction idiom: BN's
+    cross-scene totals, the spconv bias backward (via :func:`bcast_rows`)
+    and the segment engine's S-static combines all route through it. For
+    *per-scene* reductions — a segment at an arbitrary row offset, where a
+    dot's internal grouping can't be pinned — the segmented-reduction
+    engine (``kernels.segsum``) extends the same fixed-grouping guarantee
+    with an explicitly specified, segment-relative add schedule."""
+    return jnp.dot(jnp.ones((1, x.shape[0]), x.dtype), x,
+                   preferred_element_type=jnp.float32)[0].astype(x.dtype)
+
+
 def bcast_rows(v: jax.Array, cap: int) -> jax.Array:
     """Broadcast a [C] vector over ``cap`` rows as a rank-1 matmul
     ``ones[cap, 1] @ v[None, :]`` instead of a plain broadcast.
@@ -104,13 +134,72 @@ def bcast_rows(v: jax.Array, cap: int) -> jax.Array:
     Forward-exact (each element is ``1·v + nothing``), but the point is the
     *backward*: the transpose of a dot is a dot, so the cotangent reduction
     over rows that autodiff inserts here is a ``[1, cap] @ [cap, C]``
-    matmul — a library call with fixed k-panel blocking, bitwise invariant
-    under zero-row extension (``models.pointcloud._rowsum`` documents why
-    that property needs a dot) — instead of an XLA elementwise reduce whose
-    grouping drifts between capacity buckets. Every per-row broadcast on
-    the training forward path (BN stats, conv bias) routes through this one
-    helper so the invariance-critical idiom has a single home."""
+    matmul — :func:`rowsum`, which documents why that property needs a
+    dot — instead of an XLA elementwise reduce whose grouping drifts
+    between capacity buckets. Every whole-buffer broadcast on the training
+    forward path (conv bias, single-scene BN totals) routes through this
+    one helper so the invariance-critical idiom has a single home; the
+    per-scene analogue is ``kernels.segsum.segment_gather``."""
     return jnp.dot(jnp.ones((cap, 1), v.dtype), v[None, :])
+
+
+def chunked_rowdot(x: jax.Array, g: jax.Array, q: int = 256) -> jax.Array:
+    """``xᵀ @ g`` (contraction over the capacity-sized row axis) with a
+    capacity-stable operand grouping: fixed-extent ``[A, q] @ [q, B]``
+    panel dots combined strictly sequentially in a scan.
+
+    A plain ``x.T @ g`` is NOT bitwise zero-extension invariant once the
+    contraction crosses the dot library's k-panel boundary (~512 rows on
+    XLA CPU): growing N re-tiles the panels, regrouping the shared prefix
+    — measured at [8, 896]·[896, 5] vs the same data zero-extended to
+    1792 (the dW/head-gradient shape; :func:`rowsum`'s [1, N] shape is
+    the one empirically stable case). Here every dot has the SAME static
+    shape at any capacity — one executable, one grouping — and the
+    cross-panel combine is loop-carried, which XLA never reassociates.
+    Appending zero rows appends exact-zero panel products. This is the
+    row-reduction primitive for every gradient contraction over a
+    capacity-sized axis (``_dw_per_offset``, the classifier head's dW);
+    the *per-scene* analogue with the same philosophy is
+    ``kernels.segsum``."""
+    n, a = x.shape
+    npad = ((n + q - 1) // q) * q
+    if npad != n:
+        x = jnp.pad(x, ((0, npad - n), (0, 0)))
+        g = jnp.pad(g, ((0, npad - n), (0, 0)))
+    xc = x.reshape(npad // q, q, a)
+    gc = g.reshape(npad // q, q, g.shape[1])
+
+    def body(acc, xs):
+        xq, gq = xs
+        return acc + jnp.dot(xq.T, gq,
+                             preferred_element_type=jnp.float32), None
+
+    acc0 = jnp.zeros((a, g.shape[1]), jnp.float32)
+    out, _ = jax.lax.scan(body, acc0, (xc, gc))
+    return out
+
+
+@jax.custom_vjp
+def rowdot_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w`` whose weight gradient reduces over the capacity-sized row
+    axis via :func:`chunked_rowdot` (autodiff's native ``xᵀ @ g`` would
+    regroup between capacity buckets — its docstring). The forward and dx
+    contract over the static channel axis only, so they need no help. Use
+    for any dense layer applied per voxel row (the classifier head)."""
+    return jnp.dot(x, w)
+
+
+def _rowdot_matmul_fwd(x, w):
+    return jnp.dot(x, w), (x, w)
+
+
+def _rowdot_matmul_bwd(res, g):
+    x, w = res
+    return (jnp.dot(g, w.T).astype(x.dtype),
+            chunked_rowdot(x, g).astype(w.dtype))
+
+
+rowdot_matmul.defvjp(_rowdot_matmul_fwd, _rowdot_matmul_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -193,12 +282,15 @@ def _grad_weights(weights: jax.Array) -> jax.Array:
 def _dw_per_offset(features: jax.Array, m: jax.Array, g: jax.Array,
                    out_dtype) -> jax.Array:
     """dW[k] = Gₖᵀ @ g with Gₖ the offset's gathered (masked) features —
-    one [M, Cin] gather + one GEMM per offset in a scan; fp32 accumulation
-    like the forward. Never materializes [M, Kd, Cin]."""
+    one [M, Cin] gather + one chunked row contraction per offset in a
+    scan; fp32 accumulation like the forward. Never materializes
+    [M, Kd, Cin], and the contraction is :func:`chunked_rowdot` so weight
+    gradients stay bitwise invariant across capacity buckets (a plain dot
+    regroups its k-panels when M grows — its docstring)."""
     def body(carry, m_col):
         gk = features[jnp.clip(m_col, 0)] \
             * (m_col >= 0)[:, None].astype(features.dtype)
-        return carry, jnp.dot(gk.T, g, preferred_element_type=jnp.float32)
+        return carry, chunked_rowdot(gk, g)
 
     _, dw = jax.lax.scan(body, 0, m.T)
     return dw.astype(out_dtype)

@@ -317,6 +317,58 @@ def tune_layer_cost_model(
                            symmetry=symmetry)
 
 
+# ---------------------------------------------------------------------------
+# segmented-reduction backend tuning (train-mode objective: step time)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SegmentTuneResult:
+    """Tuned segmented-reduction engine choice (kernels.segsum)."""
+    backend: str
+    per_backend: dict            # backend -> seconds (fwd + bwd)
+    mode: str
+
+
+def tune_segment_backend_measure(
+    x: jax.Array,
+    seg: tuple,                  # (sid, starts, counts, S) — packed_segments
+    *,
+    q: int = 64,
+    backends: Sequence[str] = ("xla", "pallas"),
+    repeats: int = 3,
+) -> SegmentTuneResult:
+    """Wall-clock the segment engine per backend and pick the argmin.
+
+    This is the first *train-mode* tuning objective (ROADMAP): the timed
+    quantity is a full ``value_and_grad`` step of the reduction — forward
+    segment sum plus its transposed backward — not forward alone, because
+    training doubles the engine's traffic (every ``segment_gather``
+    broadcast transposes back through ``segment_sum``). The backend choice
+    is a latency knob only: both backends implement the same canonical
+    grouping, so numerics are bitwise identical whichever wins. Off-TPU,
+    "pallas" times the interpreter — restrict ``backends`` to ("xla",)
+    there (the session does)."""
+    from repro.kernels.segsum import SegmentSpec, segment_sum
+
+    sid, starts, counts, S = seg
+    per = {}
+    for backend in backends:
+        sp = SegmentSpec(backend=backend, q=q)
+
+        def step(v, sp=sp):
+            s = segment_sum(v, sid, starts, counts, num_segments=S, spec=sp)
+            return jnp.vdot(s, s)
+
+        fn = jax.jit(jax.value_and_grad(step))
+        jax.block_until_ready(fn(x))            # compile + warm
+        tic = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(fn(x))
+        per[backend] = (time.perf_counter() - tic) / repeats
+    best = min(per, key=per.get)
+    return SegmentTuneResult(backend=best, per_backend=per, mode="measure")
+
+
 def apply_tuning(spec, result: LayerTuneResult):
     """Persist a tune result on a layer spec (returns a new SpConvSpec)."""
     return dataclasses.replace(

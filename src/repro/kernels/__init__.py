@@ -9,6 +9,9 @@
   masked_group_gemm  — non-fused OS reference: masking + grouped GEMM over
                        a caller-gathered [M, Kd, Cin] tensor
   zdelta_window      — hierarchical (HBM->VMEM windowed) z-delta search
+  segsum             — segmented-reduction engine: O(N) per-scene sums
+                       (BN moments / pooling / loss) over batch-major rows
+                       with a bit-invariant, backend-identical add schedule
   flash_attention    — IO-aware attention for the LM substrate
 
 Backend-dispatch contract (shared with core/dataflow.py): ops.py wrappers
@@ -28,3 +31,6 @@ from .spconv_gather_gemm import spconv_gather_gemm
 from .ws_scatter_gemm import ws_scatter_gemm
 from .zdelta_window import zdelta_window_search
 from .flash_attention import flash_attention
+from .segsum import (SegmentSpec, segment_sum, segment_gather,
+                     segment_moments, segments_from_sizes,
+                     segment_call_count, reset_segment_calls)

@@ -7,6 +7,38 @@
 All voxel indexing (coord sets + kernel maps for every layer) happens once,
 up front, via ``core.build_network_plan`` — the network-wide indexing of
 Spira §5.5 — then the feature pass consumes the plan's kernel maps.
+
+Segmented-reduction bit-invariance lemma
+----------------------------------------
+Batched rows are batch-major-sorted, so every per-scene statistic in this
+module (train-mode BN moments, and through the same engine the scene
+pooling and loss reductions in ``train.pointcloud``) is a reduction over a
+*contiguous* row segment. The engine (``kernels.segsum``) computes it in
+one O(N) pass under an explicitly specified add schedule — rows chunked by
+*segment-relative* position, strictly sequential fp32 adds within a chunk
+and across chunk partials, invalid rows skipped. Because the schedule
+depends only on each row's position relative to its segment's start:
+
+* a scene's statistics are **bitwise alignment-invariant** — identical
+  whether its rows sit at offset 0 (a single-scene run) or mid-buffer in a
+  batch, which is what makes a batch-of-B forward *and its gradients*
+  bit-identical to B single-scene runs (tests/test_session.py,
+  tests/test_segsum.py);
+* they are **bitwise zero-extension invariant** — padding to a larger pow2
+  capacity bucket appends rows outside every segment, which the schedule
+  skips (tests/test_train_pointcloud.py pins this for parameter grads).
+
+Whole-buffer (S-static) reductions still use ``core.dataflow.rowsum``'s
+fixed-blocking dot — see its docstring for why *that* shape needs a
+library dot, and why per-scene segments (arbitrary offsets) need the
+engine's explicit schedule instead. The backward never meets an XLA
+scatter-add: ``segment_gather``'s VJP *is* ``segment_sum``.
+
+The retired O(S·cap) formulation (``dynamic_slice`` per scene + a
+``[cap, S]`` one-hot application matmul) survives only as
+:func:`_relu_bn_sliced`, the reference baseline benchmarks compare
+against; its trace counter must stay at zero in compiled session/train
+graphs (tests/test_segsum.py asserts this).
 """
 from __future__ import annotations
 
@@ -19,8 +51,11 @@ import numpy as np
 
 from repro.core import (KernelMap, SpConvSpec, apply_spconv, init_spconv,
                         build_network_plan)
-from repro.core.dataflow import bcast_rows as _bcast_rows
+from repro.core.dataflow import (bcast_rows as _bcast_rows,
+                                 rowdot_matmul, rowsum as _rowsum)
 from repro.core.packing import BitLayout
+from repro.kernels.segsum import (SegmentSpec, segment_gather,
+                                  segment_moments)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,60 +216,77 @@ def init_pointcloud(key: jax.Array, net: PointCloudNet, dtype=jnp.float32) -> di
     return params
 
 
-def _rowsum(x: jax.Array) -> jax.Array:
-    """Column sums as a ``[1, N] @ [N, C]`` matmul — the only reduction we
-    found whose result is **bitwise zero-extension invariant** in practice.
-
-    The batched-vs-looped bit-identity contract needs: padding the buffer
-    with zero rows (a larger capacity bucket) must not change the sum by
-    even one ulp. ``jnp.sum`` regroups operands when the extent changes.
-    Hand-built elementwise reduction trees (halving adds, adjacent-pair
-    reshapes, with or without optimization_barriers) are mathematically
-    invariant but NOT in practice: embedded in a large jitted graph, XLA CPU
-    re-codegens the add chain per shape (fusion recomputation + FMA
-    contraction) and results drift by an ulp between capacity buckets —
-    observed and bisected on MinkUNet-42. A dot is a library call with
-    materialized operands and fixed k-panel blocking: the shared row prefix
-    is grouped identically at any N, and zero rows only append exact ``+0``
-    panel contributions. It is also the TPU-native choice (reductions ride
-    the MXU)."""
-    return jnp.dot(jnp.ones((1, x.shape[0]), x.dtype), x,
-                   preferred_element_type=jnp.float32)[0].astype(x.dtype)
+# trace-time counter for the retired O(S·cap) BN formulation — the
+# acceptance gate "batched BN issues zero per-scene dynamic_slice / [cap, S]
+# one-hot passes" is asserted by tracing compiled graphs and checking this
+# stays 0 while kernels.segsum.segment_call_count() grows (test_segsum.py)
+SLICED_BN_CALLS = {"count": 0}
 
 
-def _relu_bn(x: jax.Array, count: jax.Array,
-             seg: "tuple | None" = None) -> jax.Array:
-    """ReLU + masked feature standardization (train-mode BN), per scene.
+def reset_sliced_bn_calls() -> None:
+    SLICED_BN_CALLS["count"] = 0
+
+
+def sliced_bn_call_count() -> int:
+    return SLICED_BN_CALLS["count"]
+
+
+def _relu_bn(x: jax.Array, count: jax.Array, seg: "tuple | None" = None, *,
+             segment: SegmentSpec | None = None) -> jax.Array:
+    """ReLU + masked feature standardization (train-mode BN), per scene —
+    one O(N) pass over the segmented-reduction engine, both directions.
 
     ``seg = (sid, starts, counts, S)`` describes the scene segmentation of
     this level's rows (scene id per row, each scene's first row and row
-    count, static scene-slot count S). ``seg=None`` (or S == 1) is the
-    single-scene case: statistics over the whole valid prefix.
+    count, static scene-slot count S) — :func:`level_segments` derives it
+    from the batch bits. ``seg=None`` is the single-scene case, expressed
+    as the S=1 segmentation of the valid prefix so every path runs the one
+    engine (the single substrate).
 
-    Per-scene statistics are computed on a scene-locally *aligned* view:
-    each scene's rows are sliced to positions [0, count_b) of a
-    capacity-sized buffer (``dynamic_slice`` from the scene's start row)
-    before the reduction, so the reduction sees the scene's rows at the same
-    positions — and therefore the same operand grouping — as a single-scene
-    run of any smaller capacity, with only zero rows appended. See
-    :func:`_rowsum` for why that gives exact batched/looped identity.
+    Moments are one segment sum over ``concat([z, z²])`` (one-pass
+    var = E[x²] − mean²: a (x − mean)² second pass would re-feed a
+    reduction result through another reduction). The per-scene application
+    is a ``segment_gather`` broadcast of ``concat([mean, inv])`` — its VJP
+    is the engine's segment sum, so autodiff's transposed reductions keep
+    the segment-relative grouping (module doc lemma) instead of lowering
+    to a scatter-add or an S-wide one-hot dot. Everything here is
+    bit-invariant under scene alignment and zero extension, which is what
+    makes batched-vs-looped runs and their gradients bit-identical."""
+    x = jax.nn.relu(x)
+    cap, c = x.shape
+    if seg is None:
+        sid = jnp.where(jnp.arange(cap) < count, 0, 1).astype(jnp.int32)
+        starts = jnp.zeros((1,), jnp.int32)
+        counts = jnp.asarray(count, jnp.int32).reshape(1)
+        S = 1
+    else:
+        sid, starts, counts, S = seg
+    sx, sx2 = segment_moments(x, sid, starts, counts, num_segments=S,
+                              spec=segment)                     # [S, c] × 2
+    denom = jnp.maximum(counts.astype(jnp.float32), 1.0)[:, None]
+    mean = sx / denom
+    var = jnp.maximum(sx2 / denom - mean * mean, 0.0)
+    inv = jax.lax.rsqrt(var + 1e-5)
+    stats = jnp.concatenate([mean, inv], axis=1).astype(x.dtype)
+    r = segment_gather(stats, sid, starts, counts, num_segments=S,
+                       spec=segment)                            # [cap, 2c]
+    return jnp.where((sid < S)[:, None], (x - r[:, :c]) * r[:, c:], 0)
 
-    Differentiable by design (the training subsystem's forward path uses
-    batch statistics, so gradients flow through mean/var): every broadcast
-    of a per-scene statistic is written as a matmul (:func:`_bcast_rows`,
-    and a one-hot [cap, S] matmul for the per-scene application) so that
-    autodiff's transposed reductions are dots with _rowsum's bit-invariance,
-    not elementwise reduce trees. A segment-sum formulation of the same
-    backward would be O(N) instead of S capacity-wide passes — ROADMAP
-    follow-up."""
+
+def _relu_bn_sliced(x: jax.Array, count: jax.Array,
+                    seg: "tuple | None" = None) -> jax.Array:
+    """The RETIRED O(S·cap) per-scene BN: S capacity-wide ``dynamic_slice``
+    alignment passes for the statistics plus a ``[cap, S]`` one-hot
+    application matmul (whose backward is another S-wide dot). Kept only
+    as the baseline the benchmarks price the segment engine against
+    (bench_train's ``segment_vs_sliced_bn``, fig11) and as a numerical
+    cross-check in tests — nothing on the compiled session/train path may
+    call it (SLICED_BN_CALLS pins that)."""
+    SLICED_BN_CALLS["count"] += 1
     x = jax.nn.relu(x)
     cap = x.shape[0]
 
     def stats(v, valid, cnt):
-        # One-pass moments: var = E[x²] − mean², both sums in ONE matmul
-        # (mean-free summands; a (x − mean)² second pass would re-feed a
-        # reduction result through another reduction, compounding the
-        # codegen sensitivity _rowsum exists to avoid).
         c = v.shape[1]
         z = jnp.where(valid, v, 0)
         s = _rowsum(jnp.concatenate([z, z * z], axis=1))
@@ -250,8 +302,6 @@ def _relu_bn(x: jax.Array, count: jax.Array,
                          (x - _bcast_rows(mean, cap)) * _bcast_rows(inv, cap),
                          0)
     sid, starts, counts, S = seg
-    # Pad with a capacity of zeros so a slice starting anywhere in [0, cap]
-    # never clamps (clamping would shift the alignment the proof needs).
     xpad = jnp.concatenate([x, jnp.zeros_like(x)])
     local = jnp.arange(cap)
     means, invs = [], []
@@ -261,11 +311,6 @@ def _relu_bn(x: jax.Array, count: jax.Array,
         means.append(mean)
         invs.append(inv)
     sid_c = jnp.clip(sid, 0, S - 1)
-    # Scene-wise application as a one-hot matmul (row j reads scene sid[j]'s
-    # stats as Σ_s 1[s == sid[j]]·stat_s — exact: one real term plus exact
-    # zeros). Backward: d(stats) = onehotᵀ @ g, a [S, cap] @ [cap, C] dot —
-    # the bit-invariant segment reduction; a gather here would transpose to
-    # an XLA scatter-add instead.
     onehot = (sid_c[:, None] == jnp.arange(S)[None, :]).astype(x.dtype)
     mean_r = jnp.dot(onehot, jnp.stack(means))
     inv_r = jnp.dot(onehot, jnp.stack(invs))
@@ -273,30 +318,35 @@ def _relu_bn(x: jax.Array, count: jax.Array,
     return jnp.where(valid, (x - mean_r) * inv_r, 0)
 
 
-def _level_segments(plan, layout: BitLayout) -> Dict[int, tuple]:
-    """Scene segmentation of every level's rows, derived from the batch
-    bits of the plan's packed coordinates.
-
-    Rows are sorted batch-major (batch bits are most significant), so each
-    scene is one contiguous segment per level; ``searchsorted`` on the
-    per-row scene ids yields each scene's start and count. Invalid (PAD)
-    rows get scene id S, which sorts after every real scene."""
+def packed_segments(packed: jax.Array, count: jax.Array,
+                    layout: BitLayout) -> tuple:
+    """Scene segmentation ``(sid, starts, counts, S)`` of one packed-row
+    buffer, from its batch bits — the engine's input contract
+    (``kernels.segsum`` module doc). Rows are batch-major-sorted, so each
+    scene is one contiguous segment; ``searchsorted`` on the per-row scene
+    ids yields each scene's start and count. Invalid (PAD) rows get scene
+    id S, which sorts after every real scene."""
     S = 1 << layout.bb
-    segs = {}
-    for m, cs in plan.coords.items():
-        rows = jnp.arange(cs.capacity)
-        sid_raw = (cs.packed >> layout.shift_b).astype(jnp.int32) & (S - 1)
-        sid = jnp.where(rows < cs.count, sid_raw, S)
-        scene_ids = jnp.arange(S, dtype=sid.dtype)
-        starts = jnp.searchsorted(sid, scene_ids, side="left").astype(jnp.int32)
-        ends = jnp.searchsorted(sid, scene_ids, side="right").astype(jnp.int32)
-        segs[m] = (sid, starts, ends - starts, S)
-    return segs
+    rows = jnp.arange(packed.shape[0])
+    sid_raw = (packed >> layout.shift_b).astype(jnp.int32) & (S - 1)
+    sid = jnp.where(rows < count, sid_raw, S)
+    scene_ids = jnp.arange(S, dtype=sid.dtype)
+    starts = jnp.searchsorted(sid, scene_ids, side="left").astype(jnp.int32)
+    ends = jnp.searchsorted(sid, scene_ids, side="right").astype(jnp.int32)
+    return (sid, starts, ends - starts, S)
+
+
+def level_segments(plan, layout: BitLayout) -> Dict[int, tuple]:
+    """Scene segmentation of every level's rows (:func:`packed_segments`
+    per coordinate set), keyed by stride level."""
+    return {m: packed_segments(cs.packed, cs.count, layout)
+            for m, cs in plan.coords.items()}
 
 
 def pointcloud_forward(params: dict, net: PointCloudNet, plan,
                        features: jax.Array, *,
-                       layout: BitLayout | None = None) -> jax.Array:
+                       layout: BitLayout | None = None,
+                       segment: SegmentSpec | None = None) -> jax.Array:
     """Run the feature-computation pass over a precomputed NetworkPlan.
 
     Handles UNet skip connections by stashing encoder outputs per level and
@@ -305,10 +355,12 @@ def pointcloud_forward(params: dict, net: PointCloudNet, plan,
     ``layout`` enables batched multi-scene execution: when given and it
     carries batch bits, BN statistics and masking are computed *per scene*
     (scene segments recovered from the batch bits of each level's packed
-    coordinates), so a batch-of-B run is bit-identical to B single-scene
-    runs. Without it (legacy single-scene calls), statistics span the whole
-    valid prefix — identical behavior, since one scene IS the whole prefix.
-    """
+    coordinates) through the O(N) segmented-reduction engine, so a
+    batch-of-B run is bit-identical to B single-scene runs (module doc
+    lemma). Without it (legacy single-scene calls), statistics span the
+    whole valid prefix — the same engine with S=1. ``segment`` selects the
+    engine backend/chunking (``kernels.segsum.SegmentSpec``, tuner-owned
+    via the session)."""
     from repro.core.sparse_tensor import SparseTensor
 
     if isinstance(features, SparseTensor):
@@ -335,7 +387,7 @@ def pointcloud_forward(params: dict, net: PointCloudNet, plan,
             "session API (repro.serve.compile_network) pads both "
             "consistently; if hand-stitching, pad features to the plan's "
             "V0 capacity.")
-    segs = _level_segments(plan, layout) if (layout and layout.bb) else {}
+    segs = level_segments(plan, layout) if (layout and layout.bb) else {}
     skips: Dict[int, jax.Array] = {}
     x = features
     for spec in net.specs:
@@ -345,9 +397,12 @@ def pointcloud_forward(params: dict, net: PointCloudNet, plan,
             if skip is not None:
                 x = jnp.concatenate([x, skip], axis=-1)
         x = apply_spconv(params[spec.name], spec, x, kmap)
-        x = _relu_bn(x, kmap.out_count, segs.get(spec.m_out))
+        x = _relu_bn(x, kmap.out_count, segs.get(spec.m_out),
+                     segment=segment)
         if spec.name.startswith("enc") and spec.name.endswith("_b"):
             skips[spec.m_out] = x
         if spec.name.startswith("stem"):
             skips[0] = x
-    return x @ params["head"].astype(x.dtype)
+    # head dW reduces over the capacity axis — rowdot_matmul keeps that
+    # contraction's grouping capacity-stable (core.dataflow doc)
+    return rowdot_matmul(x, params["head"].astype(x.dtype))

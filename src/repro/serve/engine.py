@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,10 +79,24 @@ class PointCloudServeEngine:
     a lone request is answered within the bound instead of blocking forever
     on a batch that will never fill. ``max_wait=None`` keeps the legacy
     dispatch-whatever-is-queued behavior.
+
+    Pack/execute overlap: host-side packing
+    (``SparseTensor.from_point_clouds`` — one sort + dedup per scene) is
+    the serving loop's main host cost, and it needs nothing from the
+    device. With ``pack_ahead=True``, :meth:`run` pipelines it: batch
+    t+1 is packed on a single worker thread while batch t executes on the
+    device (JAX dispatch is asynchronous, so the main thread only blocks
+    when it *materializes* batch t's logits — exactly the window the
+    worker fills). Answers are identical to the serial path
+    (parity-tested); ``packs_overlapped`` counts packs that completed
+    while their predecessor batch executed — i.e. were FULLY hidden (a
+    pack still in flight when results are materialized would make the
+    main thread wait and is not counted).
     """
 
     def __init__(self, session, max_batch: Optional[int] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 pack_ahead: bool = False):
         from .session import SpiraSession
 
         if not isinstance(session, SpiraSession):
@@ -96,12 +110,40 @@ class PointCloudServeEngine:
         self.pending: deque[PointCloudRequest] = deque()
         self._arrivals: deque[float] = deque()   # clock() at submit, aligned
         self._clock = clock                      # injectable for tests
+        self.pack_ahead = pack_ahead
         self.batches_run = 0
         self.scenes_served = 0
+        self.packs_overlapped = 0
 
     def submit(self, req: PointCloudRequest) -> None:
         self.pending.append(req)
         self._arrivals.append(self._clock())
+
+    # -- batch plumbing (shared by the serial step and the pipelined run) --
+
+    def _drain_batch(self) -> Tuple[List[PointCloudRequest], List[float]]:
+        """Pop up to max_batch requests with their submit timestamps (kept
+        so a failed pipelined dispatch can restore queue age exactly)."""
+        batch, arrivals = [], []
+        for _ in range(min(self.max_batch, len(self.pending))):
+            batch.append(self.pending.popleft())
+            arrivals.append(self._arrivals.popleft())
+        return batch, arrivals
+
+    def _pack(self, batch: List[PointCloudRequest]) -> SparseTensor:
+        return SparseTensor.from_point_clouds(
+            [(r.coords, r.features) for r in batch], self.session.layout)
+
+    def _answer(self, batch: List[PointCloudRequest], out) -> None:
+        """Scatter per-scene logits back onto the requests. Materializes
+        device results (the blocking point the pipelined run overlaps)."""
+        for req, scene in zip(batch, out.unbatch()):
+            n = int(scene.count)
+            req.logits = np.asarray(scene.features)[:n]
+            req.voxels, _ = scene.coords()
+            req.done = True
+        self.batches_run += 1
+        self.scenes_served += len(batch)
 
     def step(self, max_wait: Optional[float] = None
              ) -> List[PointCloudRequest]:
@@ -116,28 +158,53 @@ class PointCloudServeEngine:
         if (max_wait is not None and len(self.pending) < self.max_batch
                 and self._clock() - self._arrivals[0] < max_wait):
             return []
-        batch = []
-        for _ in range(min(self.max_batch, len(self.pending))):
-            batch.append(self.pending.popleft())
-            self._arrivals.popleft()
-        st = SparseTensor.from_point_clouds(
-            [(r.coords, r.features) for r in batch], self.session.layout)
-        out = self.session(st)
-        for req, scene in zip(batch, out.unbatch()):
-            n = int(scene.count)
-            req.logits = np.asarray(scene.features)[:n]
-            req.voxels, _ = scene.coords()
-            req.done = True
-        self.batches_run += 1
-        self.scenes_served += len(batch)
+        batch, _ = self._drain_batch()
+        self._answer(batch, self.session(self._pack(batch)))
         return batch
 
     def run(self, requests: Sequence[PointCloudRequest]
             ) -> List[PointCloudRequest]:
+        """Serve everything queued. ``pack_ahead=True`` uses the pipelined
+        loop (class doc): pack batch t+1 on a worker thread while batch t
+        executes, with bitwise-identical answers to the serial loop."""
         for r in requests:
             self.submit(r)
-        while self.pending:
-            self.step()
+        if not self.pack_ahead:
+            while self.pending:
+                self.step()
+            return list(requests)
+        from concurrent.futures import ThreadPoolExecutor
+
+        pool = ThreadPoolExecutor(max_workers=1)   # single packing worker
+        try:
+            batch, _ = self._drain_batch()
+            st = self._pack(batch) if batch else None
+            while batch:
+                nxt, nxt_arrivals = self._drain_batch()
+                fut = pool.submit(self._pack, nxt) if nxt else None
+                try:
+                    out = self.session(st)  # async dispatch to the device
+                    self._answer(batch, out)   # blocks on device results
+                except BaseException:
+                    # batch t failed — same outcome as the serial path. But
+                    # batch t+1 was only PREFETCHED, never dispatched: put
+                    # its requests back at the head of the queue with their
+                    # ORIGINAL submit times (so a step(max_wait=) retry
+                    # still honors their true queue age), for a caller that
+                    # catches and retries.
+                    for r, at in zip(reversed(nxt), reversed(nxt_arrivals)):
+                        self.pending.appendleft(r)
+                        self._arrivals.appendleft(at)
+                    raise
+                if fut is not None and fut.done():
+                    # the pack finished while the device executed — it was
+                    # fully hidden (an unfinished pack would still block in
+                    # fut.result() below, i.e. not overlapped)
+                    self.packs_overlapped += 1
+                batch = nxt
+                st = fut.result() if fut is not None else None
+        finally:
+            pool.shutdown(wait=True)
         return list(requests)
 
 

@@ -52,10 +52,14 @@ runs batched without modification:
 
 Feature computation is batch-aware in exactly one place: BN statistics are
 computed per scene (``models.pointcloud._relu_bn`` with the scene segments
-recovered from each level's batch bits) with a zero-extension-invariant
-matmul reduction (``models.pointcloud._rowsum``), which
-makes a batch-of-B run *bit-identical* to B single-scene runs — tested in
-tests/test_session.py.
+recovered from each level's batch bits) through the O(N) segmented-
+reduction engine (``kernels.segsum`` — one pass over the row buffer, no
+per-scene ``dynamic_slice`` or ``[cap, S]`` one-hot passes), whose
+alignment- and zero-extension-invariant add schedule makes a batch-of-B
+run *bit-identical* to B single-scene runs, gradients included — tested
+in tests/test_session.py and tests/test_segsum.py. The engine backend is
+the session's ``segment`` spec (``segment_backend=`` at compile time,
+co-tuned on step time under ``tuner="measure"``).
 """
 from __future__ import annotations
 
@@ -67,13 +71,14 @@ import jax.numpy as jnp
 
 from repro.core import (LayerTuneResult, apply_tuning, build_network_plan,
                         tune_layer_cost_model, tune_layer_measure,
-                        zdelta_offsets)
+                        tune_segment_backend_measure, zdelta_offsets)
 from repro.core.network_plan import NetworkPlan
 from repro.core.packing import BitLayout
 from repro.core.sparse_tensor import SparseTensor, ensure_sparse_tensor
 from repro.core.spconv import SpConvSpec
+from repro.kernels.segsum import SegmentSpec
 from repro.models.pointcloud import (PointCloudNet, init_pointcloud,
-                                     pointcloud_forward)
+                                     packed_segments, pointcloud_forward)
 from .bucketing import bucket_capacity
 
 
@@ -95,6 +100,10 @@ class SpiraSession:
     downsample_method: str = "auto"
     min_bucket: int = 1024
     max_bucket: Optional[int] = None
+    # segmented-reduction engine config (kernels.segsum) — one spec for the
+    # whole network, so every per-scene reduction shares one bit contract;
+    # backend co-tuned on step time under tuner="measure"
+    segment: SegmentSpec = SegmentSpec()
 
     def __post_init__(self):
         specs = self.net.conv_specs()
@@ -102,6 +111,7 @@ class SpiraSession:
         engine = self.engine
         method = self.downsample_method
         net = self.net
+        seg_spec = self.segment
 
         out_level = specs[-1].m_out if specs else 0
 
@@ -111,7 +121,7 @@ class SpiraSession:
                                       engine=engine,
                                       downsample_method=method)
             logits = pointcloud_forward(params, net, plan, feats,
-                                        layout=layout)
+                                        layout=layout, segment=seg_spec)
             out = plan.coords[out_level]
             return logits, out.packed, out.count
 
@@ -206,6 +216,7 @@ def compile_network(
     max_bucket: Optional[int] = None,
     tuner: TunerArg = None,
     tune_sample: Optional[SparseTensor] = None,
+    segment_backend: str = "auto",
     dtype=jnp.float32,
 ) -> SpiraSession:
     """Build a :class:`SpiraSession` — the compile-once front door.
@@ -228,20 +239,45 @@ def compile_network(
           ``core.tuner.apply_tuning``.
       Tuned specs are persisted on the session's network — the session IS
       the tuner persistence.
+    * ``segment_backend`` — the segmented-reduction engine backend
+      ("auto" | "xla" | "pallas"; ``kernels.segsum``) shared by every
+      per-scene BN/pooling/loss reduction. Under ``tuner="measure"`` it is
+      co-tuned on *step* time (fwd + transposed bwd —
+      ``core.tuner.tune_segment_backend_measure``, the train-mode
+      objective) and the tuned spec persisted on the session.
     """
     if (1 << layout.bb) < batch:
         layout = layout.with_batch(batch)
     if params is None:
         params = init_pointcloud(key if key is not None else jax.random.key(0),
                                  net, dtype)
+    seg_spec = SegmentSpec(backend=segment_backend)
     if tuner is not None:
         specs = _tune_specs(net, layout, params, tuner, tune_sample,
                             engine=engine, downsample_method=downsample_method,
                             min_bucket=min_bucket)
         net = dataclasses.replace(net, specs=specs)
+        if tuner == "measure":
+            seg_spec = _tune_segment(seg_spec, tune_sample,
+                                     min_bucket=min_bucket)
     return SpiraSession(net=net, layout=layout, params=params, engine=engine,
                         downsample_method=downsample_method,
-                        min_bucket=min_bucket, max_bucket=max_bucket)
+                        min_bucket=min_bucket, max_bucket=max_bucket,
+                        segment=seg_spec)
+
+
+def _tune_segment(seg_spec: SegmentSpec, tune_sample: SparseTensor, *,
+                  min_bucket: int) -> SegmentSpec:
+    """Measure the segment-engine backend on the sample's V0 segmentation
+    (step-time objective) and persist the winner on the spec."""
+    stp = tune_sample.pad_to(bucket_capacity(tune_sample.capacity,
+                                             min_bucket=min_bucket))
+    seg = packed_segments(stp.packed, stp.count, stp.layout)
+    on_tpu = jax.default_backend() == "tpu"
+    res = tune_segment_backend_measure(
+        stp.features, seg, q=seg_spec.q,
+        backends=("xla", "pallas") if on_tpu else ("xla",))
+    return dataclasses.replace(seg_spec, backend=res.backend)
 
 
 def _tune_specs(net: PointCloudNet, layout: BitLayout, params: dict,

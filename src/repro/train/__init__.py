@@ -3,5 +3,5 @@ from .loop import TrainConfig, make_train_step, train
 from .pointcloud import (PointCloudTrainConfig, PointCloudTrainer,
                          labeled_batch, labeled_tensor,
                          make_pointcloud_train_step, scene_features,
-                         segmentation_loss)
+                         scene_pool, segmentation_loss)
 from . import compression

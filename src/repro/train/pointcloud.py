@@ -25,6 +25,17 @@ serving engine:
   batch to the session's pow2 capacity bucket; the train-step jit cache is
   the bucket cache, exactly like inference.
 
+* **O(N) per-scene reductions, both directions.** Batched BN moments, the
+  masked-CE loss reduction and :func:`scene_pool` all run on the
+  segmented-reduction engine (``kernels.segsum``): one pass over the row
+  buffer keyed by the batch bits' scene-id column, no per-scene
+  ``dynamic_slice`` and no ``[cap, S]`` one-hot matmuls — and because the
+  engine's gather/sum primitives are each other's VJP transposes, the
+  backward is the same O(N) shape (never an XLA scatter-add). The
+  engine's alignment/zero-extension invariance is what keeps parameter
+  gradients bitwise identical across capacity buckets
+  (tests/test_train_pointcloud.py).
+
 Data contract: per-voxel class labels aligned with the raw point cloud
 (``data.scenes.scene_batch(labels=True)``). :func:`labeled_tensor` carries
 labels through SparseTensor's sort/dedup by riding them in as an extra
@@ -44,11 +55,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_network_plan
+from repro.core import build_network_plan, rowsum
 from repro.core.packing import BitLayout
 from repro.core.sparse_tensor import SparseTensor, ensure_sparse_tensor
 from repro.data.scenes import GUARD, Scene
-from repro.models.pointcloud import PointCloudNet, pointcloud_forward
+from repro.kernels.segsum import SegmentSpec, segment_sum
+from repro.models.pointcloud import (PointCloudNet, packed_segments,
+                                     pointcloud_forward)
 from .optimizer import AdamWConfig, OptState, apply_updates, init_opt_state
 
 
@@ -145,20 +158,60 @@ def labeled_batch(batch: Sequence[Scene], layout: BitLayout, *,
 # loss + train step
 # ---------------------------------------------------------------------------
 
-def segmentation_loss(logits: jax.Array, labels: jax.Array
+def segmentation_loss(logits: jax.Array, labels: jax.Array, *,
+                      seg: Optional[tuple] = None,
+                      segment: Optional[SegmentSpec] = None
                       ) -> Tuple[jax.Array, jax.Array]:
     """Masked mean cross-entropy + accuracy over rows with ``label >= 0``.
     Any negative label is ignored (PAD rows and bucket padding carry the
-    config's ``ignore_label``, which is validated negative)."""
+    config's ``ignore_label``, which is validated negative).
+
+    ``seg = (sid, starts, counts, S)`` (the output level's scene
+    segmentation, ``models.pointcloud.level_segments``) routes the row
+    reduction through the O(N) segmented-reduction engine: one segment sum
+    yields per-scene (Σ ce·w, Σ w, Σ hit·w), and the cross-scene totals
+    are an S-static :func:`~repro.core.rowsum` dot — so the loss *value*
+    is the same global masked mean, but its reduction (and therefore every
+    logit gradient, via the engine's gather-transposed VJP) is bitwise
+    invariant under capacity re-bucketing and scene alignment, with no
+    capacity-wide pass depending on S. ``seg=None`` keeps the legacy
+    single-scene ``jnp.sum`` path (masking there is label-driven and need
+    not be contiguous)."""
     valid = labels >= 0
     lab = jnp.clip(labels, 0)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     ce = -jnp.take_along_axis(logp, lab[:, None], axis=-1)[:, 0]
     w = valid.astype(jnp.float32)
-    denom = jnp.maximum(w.sum(), 1.0)
-    loss = (ce * w).sum() / denom
-    acc = ((jnp.argmax(logp, axis=-1) == lab) * w).sum() / denom
-    return loss, acc
+    hit = (jnp.argmax(logp, axis=-1) == lab).astype(jnp.float32)
+    if seg is None:
+        denom = jnp.maximum(w.sum(), 1.0)
+        return (ce * w).sum() / denom, (hit * w).sum() / denom
+    sid, starts, counts, S = seg
+    per_scene = segment_sum(jnp.stack([ce * w, w, hit * w], axis=1),
+                            sid, starts, counts, num_segments=S,
+                            spec=segment)                       # [S, 3]
+    tot = rowsum(per_scene)
+    denom = jnp.maximum(tot[1], 1.0)
+    return tot[0] / denom, tot[2] / denom
+
+
+def scene_pool(st: SparseTensor, *, mode: str = "mean",
+               segment: Optional[SegmentSpec] = None) -> jax.Array:
+    """Per-scene pooled feature vectors ``[num_scenes, C]`` — global
+    sum/mean pooling over each scene's rows through the segment engine
+    (one O(N) pass; batched pooling is bit-identical to pooling each scene
+    alone, the engine's alignment invariance). The scene-classification
+    head's front half: pool a batched SparseTensor, feed the [S, C] rows
+    to any dense classifier. Jit-traceable (the segmentation is derived
+    from the packed batch bits in-graph)."""
+    if mode not in ("mean", "sum"):
+        raise ValueError(f"mode must be 'mean' or 'sum', got {mode!r}")
+    sid, starts, counts, S = packed_segments(st.packed, st.count, st.layout)
+    s = segment_sum(st.features, sid, starts, counts, num_segments=S,
+                    spec=segment)
+    if mode == "mean":
+        s = s / jnp.maximum(counts.astype(jnp.float32), 1.0)[:, None]
+    return s.astype(st.features.dtype)
 
 
 def make_pointcloud_train_step(
@@ -168,6 +221,7 @@ def make_pointcloud_train_step(
     *,
     engine: str = "zdelta",
     downsample_method: str = "auto",
+    segment: Optional[SegmentSpec] = None,
 ) -> Callable:
     """Build the fused plan→forward→loss→grad→update step.
 
@@ -177,7 +231,10 @@ def make_pointcloud_train_step(
     kernel-map-transposed backward and the AdamW update, so XLA schedules
     indexing off the critical path for training exactly as it does for
     inference, and the backward provably reuses the forward plan (module
-    doc)."""
+    doc). Under a batched layout, BN statistics AND the loss reduction run
+    on the segmented-reduction engine (``segment`` spec — the session's,
+    when built via ``compile_train``), so no stage of the step performs an
+    S-dependent number of capacity-wide passes in either direction."""
     specs = net.conv_specs()
     in_level = specs[0].m_in if specs else 0
     out_level = specs[-1].m_out if specs else 0
@@ -193,8 +250,13 @@ def make_pointcloud_train_step(
             plan = build_network_plan(packed, specs=specs, layout=layout,
                                       engine=engine,
                                       downsample_method=downsample_method)
-            logits = pointcloud_forward(p, net, plan, feats, layout=layout)
-            return segmentation_loss(logits, labels)
+            logits = pointcloud_forward(p, net, plan, feats, layout=layout,
+                                        segment=segment)
+            out_cs = plan.coords[out_level]
+            seg = (packed_segments(out_cs.packed, out_cs.count, layout)
+                   if layout.bb else None)
+            return segmentation_loss(logits, labels, seg=seg,
+                                     segment=segment)
 
         (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         params, opt_state, metrics = apply_updates(params, grads, opt_state,
@@ -229,7 +291,8 @@ class PointCloudTrainer:
             init_opt_state(session.params, self.tcfg.opt)
         self._step = jax.jit(make_pointcloud_train_step(
             session.net, session.layout, self.tcfg, engine=session.engine,
-            downsample_method=session.downsample_method))
+            downsample_method=session.downsample_method,
+            segment=getattr(session, "segment", None)))
 
     def step(self, st: SparseTensor, labels) -> dict:
         """One optimization step on a (batched) labeled SparseTensor.

@@ -1,0 +1,320 @@
+"""The segmented-reduction engine: canonical-grouping bit contracts,
+Pallas/XLA backend parity (fwd + bwd), the no-S-wide-passes acceptance
+counters, and the BN/pooling/loss call sites built on it."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SparseTensor, SpConvSpec, build_network_plan
+from repro.data import scenes
+from repro.kernels.segsum import (SegmentSpec, reset_segment_calls,
+                                  segment_call_count, segment_gather,
+                                  segment_moments, segment_sum,
+                                  segments_from_sizes)
+from repro.models import pointcloud as pc
+from repro.serve import compile_network
+from repro.train.pointcloud import (PointCloudTrainConfig, labeled_batch,
+                                    make_pointcloud_train_step, scene_pool,
+                                    segmentation_loss)
+
+
+def _segments(sizes, cap, C, seed=0):
+    """A synthetic segmented buffer (structure from the engine's canonical
+    builder) with random rows on the valid prefix."""
+    rng = np.random.default_rng(seed)
+    n = sum(sizes)
+    x = np.zeros((cap, C), np.float32)
+    x[:n] = rng.normal(size=(n, C)).astype(np.float32)
+    sid, starts, counts = segments_from_sizes(sizes, cap)
+    return (jnp.asarray(x), jnp.asarray(sid), jnp.asarray(starts),
+            jnp.asarray(counts), len(sizes))
+
+
+def _ref(x, sid, starts, counts, S):
+    x, starts, counts = map(np.asarray, (x, starts, counts))
+    return np.stack([x[starts[b]: starts[b] + counts[b]].sum(0)
+                     for b in range(S)])
+
+
+# ---------------------------------------------------------------------------
+# numerics + backend bit parity (the ci.sh segsum smoke stage)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q", [8, 64])
+@pytest.mark.parametrize("sizes", [[5], [7, 0, 33, 12], [1, 1, 1], [0, 0]])
+def test_matches_naive_sum(sizes, q):
+    x, sid, starts, counts, S = _segments(sizes, 96, 5)
+    out = segment_sum(x, sid, starts, counts, num_segments=S,
+                      spec=SegmentSpec(backend="xla", q=q))
+    np.testing.assert_allclose(np.asarray(out),
+                               _ref(x, sid, starts, counts, S),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("q", [8, 64])
+@pytest.mark.parametrize("sizes", [[5], [7, 0, 33, 12], [130, 61]])
+def test_pallas_matches_xla_bitwise(sizes, q):
+    """Both backends implement the one canonical grouping — outputs must
+    agree bit-for-bit (interpret mode off-TPU)."""
+    x, sid, starts, counts, S = _segments(sizes, 256, 6)
+    a = segment_sum(x, sid, starts, counts, num_segments=S,
+                    spec=SegmentSpec(backend="xla", q=q))
+    b = segment_sum(x, sid, starts, counts, num_segments=S,
+                    spec=SegmentSpec(backend="pallas", q=q))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pallas_backward_bit_parity():
+    """segment_gather's VJP runs the engine's segment sum — the cotangent
+    reduction must also be backend-bit-identical."""
+    x, sid, starts, counts, S = _segments([9, 40, 3], 128, 4, seed=3)
+    w = jax.random.normal(jax.random.key(1), (128, 4))
+    v0 = jnp.asarray(_ref(x, sid, starts, counts, S))
+
+    def loss(v, spec):
+        return jnp.vdot(w, segment_gather(v, sid, starts, counts,
+                                          num_segments=S, spec=spec))
+
+    ga = jax.grad(loss)(v0, SegmentSpec(backend="xla", q=8))
+    gb = jax.grad(loss)(v0, SegmentSpec(backend="pallas", q=8))
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(gb))
+
+
+# ---------------------------------------------------------------------------
+# the invariance contract (unit level; property-tested in test_property.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_zero_extension_bit_invariant(backend):
+    sizes = [11, 0, 57]
+    x, sid, starts, counts, S = _segments(sizes, 80, 3, seed=5)
+    sp = SegmentSpec(backend=backend, q=16)
+    base = segment_sum(x, sid, starts, counts, num_segments=S, spec=sp)
+    x2 = jnp.pad(x, ((0, 176), (0, 0)))
+    sid2 = jnp.pad(sid, (0, 176), constant_values=S)
+    ext = segment_sum(x2, sid2, starts, counts, num_segments=S, spec=sp)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(ext))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_alignment_and_permutation_bit_invariant(backend):
+    """A segment's sum depends only on its rows' relative order: packing
+    the scenes in any slot order (different starts) and running any scene
+    alone at offset 0 all produce the same bits."""
+    sizes = [14, 29, 6]
+    x, sid, starts, counts, S = _segments(sizes, 64, 4, seed=7)
+    sp = SegmentSpec(backend=backend, q=8)
+    base = np.asarray(segment_sum(x, sid, starts, counts,
+                                  num_segments=S, spec=sp))
+    perm = [2, 0, 1]
+    sidp, startsp, countsp = segments_from_sizes([sizes[b] for b in perm], 64)
+    xp = np.zeros_like(np.asarray(x))
+    pos = 0
+    for b in perm:
+        sz = sizes[b]
+        xp[pos:pos + sz] = np.asarray(x)[int(starts[b]): int(starts[b]) + sz]
+        pos += sz
+    out = np.asarray(segment_sum(
+        jnp.asarray(xp), jnp.asarray(sidp), jnp.asarray(startsp),
+        jnp.asarray(countsp), num_segments=S, spec=sp))
+    np.testing.assert_array_equal(out, base[perm])
+    # each scene alone at offset 0, in a smaller buffer
+    for b in range(S):
+        sz = sizes[b]
+        xa = np.zeros((32, 4), np.float32)
+        xa[:sz] = np.asarray(x)[int(starts[b]): int(starts[b]) + sz]
+        sa, sta, cta = segments_from_sizes([sz], 32)
+        alone = np.asarray(segment_sum(
+            jnp.asarray(xa), jnp.asarray(sa), jnp.asarray(sta),
+            jnp.asarray(cta), num_segments=1, spec=sp))
+        np.testing.assert_array_equal(alone[0], base[b])
+
+
+def test_segment_moments_one_pass():
+    x, sid, starts, counts, S = _segments([10, 22], 48, 3, seed=9)
+    s, s2 = segment_moments(x, sid, starts, counts, num_segments=S)
+    np.testing.assert_allclose(np.asarray(s), _ref(x, sid, starts, counts, S),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s2),
+                               _ref(x * x, sid, starts, counts, S),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# call sites: BN, pooling, loss
+# ---------------------------------------------------------------------------
+
+def _batched_setup(B=3, extent=(28, 24, 16)):
+    batch = scenes.scene_batch(seed=11, batch=B, kind="indoor", extent=extent)
+    rng = np.random.default_rng(11)
+    clouds = [(sc.coords,
+               rng.normal(size=(len(sc.coords), 4)).astype(np.float32))
+              for sc in batch]
+    layout = batch[0].layout.with_batch(B)
+    return layout, clouds
+
+
+def test_relu_bn_matches_sliced_reference():
+    """The engine-backed BN computes the same statistics as the retired
+    O(S·cap) sliced formulation (numerically — the groupings differ)."""
+    layout, clouds = _batched_setup()
+    st = SparseTensor.from_point_clouds(clouds, layout)
+    seg = pc.packed_segments(st.packed, st.count, layout)
+    x = jax.random.normal(jax.random.key(0), (st.capacity, 8))
+    a = pc._relu_bn(x, st.count, seg)
+    b = pc._relu_bn_sliced(x, st.count, seg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_scene_pool_bit_identity():
+    """Pooling a batched tensor == pooling each scene alone, bitwise."""
+    layout, clouds = _batched_setup()
+    st = SparseTensor.from_point_clouds(clouds, layout)
+    pooled = np.asarray(scene_pool(st, mode="mean"))
+    for i, (c, f) in enumerate(clouds):
+        alone = SparseTensor.from_point_clouds([(c, f)], layout)
+        np.testing.assert_array_equal(
+            np.asarray(scene_pool(alone, mode="mean"))[0], pooled[i],
+            err_msg=f"scene {i}")
+    sums = np.asarray(scene_pool(st, mode="sum"))
+    counts = st.scene_segments()[1]
+    np.testing.assert_allclose(sums / np.maximum(counts, 1)[:, None],
+                               pooled, rtol=1e-6)
+
+
+def test_segmented_loss_matches_global_mean():
+    """The engine-routed loss is the same global masked mean, reduced
+    per-scene first."""
+    layout, clouds = _batched_setup()
+    st = SparseTensor.from_point_clouds(clouds, layout)
+    seg = pc.packed_segments(st.packed, st.count, layout)
+    n = int(st.count)
+    logits = jax.random.normal(jax.random.key(2), (st.capacity, 5))
+    labels = np.full(st.capacity, -1, np.int32)
+    labels[:n] = np.random.default_rng(0).integers(0, 5, n)
+    l_ref, a_ref = segmentation_loss(logits, jnp.asarray(labels))
+    l_seg, a_seg = segmentation_loss(logits, jnp.asarray(labels), seg=seg)
+    np.testing.assert_allclose(float(l_seg), float(l_ref), rtol=1e-6)
+    np.testing.assert_allclose(float(a_seg), float(a_ref), rtol=1e-6)
+
+
+def test_batched_grads_zero_extension_invariant():
+    """The PR-4 invariance, now at B > 1 through the engine: padding a
+    BATCHED training batch to a larger capacity bucket must not move any
+    parameter gradient by an ulp (BN + loss reductions included)."""
+    B = 2
+    sb = scenes.scene_batch(seed=6, batch=B, kind="indoor",
+                            extent=(28, 24, 16), labels=True, n_classes=5)
+    net = pc.tiny_segnet(in_channels=4, n_classes=5, width=8, depth=2)
+    layout = sb[0].layout.with_batch(B)
+    st, lab = labeled_batch(sb, layout)
+    params = pc.init_pointcloud(jax.random.key(0), net)
+    specs = net.conv_specs()
+
+    def grads_at(cap):
+        stp = st.pad_to(cap)
+        labp = jnp.concatenate([lab, jnp.full((cap - lab.shape[0],), -1,
+                                              lab.dtype)])
+
+        def loss_fn(p):
+            plan = build_network_plan(stp.packed, specs=specs, layout=layout)
+            logits = pc.pointcloud_forward(p, net, plan, stp.features,
+                                           layout=layout)
+            seg = pc.level_segments(plan, layout)[0]
+            return segmentation_loss(logits, labp, seg=seg)[0]
+
+        return jax.grad(loss_fn)(params)
+
+    cap0 = ((st.capacity + 127) // 128) * 128
+    g_a = grads_at(cap0)
+    g_b = grads_at(cap0 * 2)
+    for a, b in zip(jax.tree.leaves(g_a), jax.tree.leaves(g_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# tuner: the train-mode (step-time) objective for the engine backend
+# ---------------------------------------------------------------------------
+
+def test_tune_segment_backend_and_session_persistence():
+    from repro.core import tune_segment_backend_measure
+
+    x, sid, starts, counts, S = _segments([30, 50], 128, 4)
+    res = tune_segment_backend_measure(x, (sid, starts, counts, S),
+                                       backends=("xla",), repeats=1)
+    assert res.backend == "xla" and res.mode == "measure"
+    assert set(res.per_backend) == {"xla"}
+
+    # compile_network(tuner="measure") persists the tuned SegmentSpec on
+    # the session (off-TPU the sweep is xla-only) and stays bit-identical
+    layout, clouds = _batched_setup(B=2)
+    sample = SparseTensor.from_point_clouds(clouds[:1], layout)
+    net = pc.tiny_segnet(in_channels=4, n_classes=5, width=8, depth=2)
+    sess = compile_network(net, layout, batch=2, min_bucket=128,
+                           tuner="measure", tune_sample=sample)
+    assert sess.segment.backend == "xla"
+    out_b = sess(SparseTensor.from_point_clouds(clouds, sess.layout))
+    o0 = sess(SparseTensor.from_point_clouds(clouds[:1],
+                                             sess.layout)).unbatch()[0]
+    n = int(o0.count)
+    np.testing.assert_array_equal(
+        np.asarray(out_b.unbatch()[0].features)[:n],
+        np.asarray(o0.features)[:n])
+
+
+# ---------------------------------------------------------------------------
+# the acceptance counters: zero S-wide passes on the batched path
+# ---------------------------------------------------------------------------
+
+def test_batched_step_has_no_sliced_passes():
+    """Tracing the batched session forward AND the full train step must
+    enter zero retired sliced-BN passes and an S-INDEPENDENT number of
+    segment-engine reductions into the graph (one per BN level application
+    + one for the loss) — the 'capacity-wide passes independent of S'
+    acceptance gate, asserted by trace counters at B=2 vs B=4."""
+    def trace_counts(B):
+        sb = scenes.scene_batch(seed=1, batch=B, kind="indoor",
+                                extent=(28, 24, 16), labels=True,
+                                n_classes=5)
+        net = pc.tiny_segnet(in_channels=4, n_classes=5, width=8, depth=3)
+        session = compile_network(net, sb[0].layout, batch=B,
+                                  min_bucket=128)
+        st, lab = labeled_batch(sb, session.layout)
+        stp = st.pad_to(session._bucket(st.capacity))
+        labp = jnp.concatenate([lab, jnp.full(
+            (stp.capacity - lab.shape[0],), -1, lab.dtype)]) \
+            if stp.capacity != lab.shape[0] else lab
+        step = make_pointcloud_train_step(net, session.layout,
+                                          PointCloudTrainConfig())
+        from repro.train import init_opt_state
+        opt = init_opt_state(session.params, PointCloudTrainConfig().opt)
+
+        jax.clear_caches()
+        reset_segment_calls()
+        pc.reset_sliced_bn_calls()
+        jax.make_jaxpr(lambda p, pk, f: pointcloud_fwd(session, p, pk, f))(
+            session.params, stp.packed, stp.features)
+        fwd_seg = segment_call_count()
+        jax.clear_caches()
+        reset_segment_calls()
+        jax.make_jaxpr(step)(session.params, opt, stp.packed, stp.features,
+                             labp)
+        step_seg = segment_call_count()
+        return fwd_seg, step_seg, pc.sliced_bn_call_count(), len(net.specs)
+
+    def pointcloud_fwd(session, p, pk, f):
+        plan = build_network_plan(pk, specs=session.net.conv_specs(),
+                                  layout=session.layout)
+        return pc.pointcloud_forward(p, session.net, plan, f,
+                                     layout=session.layout)
+
+    fwd2, step2, sliced2, n_layers = trace_counts(2)
+    fwd4, step4, sliced4, _ = trace_counts(4)
+    assert sliced2 == 0 and sliced4 == 0          # retired path never traced
+    assert fwd2 == n_layers                       # one engine pass per BN
+    # step trace: fwd BN sums + their gather-transposed backwards + loss
+    assert n_layers + 1 <= step2 <= 2 * n_layers + 2
+    # S-independence: doubling the scene count adds NO reductions
+    assert (fwd4, step4) == (fwd2, step2)

@@ -134,9 +134,10 @@ def test_trainer_bucket_cache():
 def test_grads_zero_extension_invariant():
     """The bit-invariance contract extends to the backward: padding the
     input to a larger capacity bucket must not change the parameter
-    gradients by an ulp. This is what the dot-structured BN backward
-    (models.pointcloud._bcast_rows / the one-hot matmul) and the matmul
-    reductions in dW buy."""
+    gradients by an ulp. This is what the segmented-reduction engine's
+    invariant BN backward (kernels.segsum) and the capacity-stable
+    chunked row contractions in dW (core.dataflow.chunked_rowdot) buy.
+    The batched (B > 1) version lives in tests/test_segsum.py."""
     sb = scenes.scene_batch(seed=5, batch=1, kind="indoor", extent=EXTENT,
                             labels=True, n_classes=N_CLASSES)
     net = pc.tiny_segnet(in_channels=4, n_classes=N_CLASSES, width=8, depth=2)
