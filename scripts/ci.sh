@@ -45,6 +45,22 @@ python -m pytest -x -q \
   "tests/test_session.py::test_batched_bit_identity[2-3-zdelta]" \
   tests/test_session.py::test_session_jit_cache_counts
 
+# robustness smoke: the serving stack's degraded-mode contract. Poison
+# quarantine must stay BITWISE on both indexing engines (zdelta and
+# zdelta_pallas), transients retry with capped backoff, WS overflow
+# escalates to a replanned bucket instead of silently truncating, and the
+# guarded-ingest boundary rejects aliasing coordinates with a categorized
+# report — plus the fault-isolated serving example end to end (mixed
+# faulty traffic: invalid / quarantined / deadline / shed in one run).
+python -m pytest -x -q \
+  "tests/test_faults.py::test_poison_isolated_bitwise[zdelta]" \
+  "tests/test_faults.py::test_poison_isolated_bitwise[zdelta_pallas]" \
+  tests/test_faults.py::test_transient_fault_retried_with_capped_backoff \
+  tests/test_faults.py::test_overflow_escalation_matches_lossless_bitwise \
+  tests/test_validate.py::test_reject_raises_with_categorized_report \
+  tests/test_validate.py::test_out_of_range_is_rejected_not_wrapped
+python examples/robust_serve.py --smoke >/dev/null
+
 # example smoke: the session front door runs headless end to end
 python examples/pointcloud_inference.py --smoke >/dev/null
 python examples/pointcloud_serve.py --smoke >/dev/null

@@ -13,6 +13,8 @@ from .dataflow import (output_stationary, weight_stationary, hybrid,
                        rowsum, bcast_rows, chunked_rowdot, rowdot_matmul)
 from .spconv import SpConvSpec, init_spconv, apply_spconv
 from .sparse_tensor import SparseTensor, ensure_sparse_tensor
+from .validate import (ValidationError, ValidationReport,
+                       validate_point_cloud)
 from .network_plan import NetworkPlan, build_network_plan, sequential_plan_fns, plan_levels
 from .tuner import (tune_threshold_measure, tune_threshold_cost_model,
                     candidate_ts, tune_layer_measure, tune_layer_cost_model,

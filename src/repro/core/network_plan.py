@@ -53,23 +53,36 @@ from .packing import offset_grid, pack_offsets
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class NetworkPlan:
-    """All coordinate sets (by stride level) + all kernel maps (by layer)."""
+    """All coordinate sets (by stride level) + all kernel maps (by layer).
+
+    ``stats`` carries per-layer degradation counters computed as a
+    byproduct of plan building — today the number of Pallas superwindow
+    (tile, offset-group) cells that overflowed their DMA'd window and were
+    repaired by the XLA fallback (0 for non-Pallas engines). Serving
+    surfaces them in ``SpiraSession``'s per-call HealthReport; a persistent
+    nonzero count means the tuner's ``plan_superwindow`` W is undersized
+    for the traffic."""
 
     coords: Dict[int, CoordSet]       # level m -> coordinate set
     kmaps: Dict[str, KernelMap]       # layer name -> kernel map
+    stats: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    # layer name -> int32 scalar: overflowed window cells (see class doc)
 
     def tree_flatten(self):
         ck = sorted(self.coords)
         kk = sorted(self.kmaps)
-        return ([self.coords[k] for k in ck] + [self.kmaps[k] for k in kk],
-                (tuple(ck), tuple(kk)))
+        sk = sorted(self.stats)
+        return ([self.coords[k] for k in ck] + [self.kmaps[k] for k in kk]
+                + [self.stats[k] for k in sk],
+                (tuple(ck), tuple(kk), tuple(sk)))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        ck, kk = aux
+        ck, kk, sk = aux
         coords = dict(zip(ck, children[: len(ck)]))
-        kmaps = dict(zip(kk, children[len(ck):]))
-        return cls(coords, kmaps)
+        kmaps = dict(zip(kk, children[len(ck): len(ck) + len(kk)]))
+        stats = dict(zip(sk, children[len(ck) + len(kk):]))
+        return cls(coords, kmaps, stats)
 
 
 def plan_levels(specs: Sequence[SpConvSpec]) -> Tuple[int, ...]:
@@ -85,13 +98,16 @@ PLAN_BM = 128   # output-tile rows for the Pallas engines; the tuner's
 
 
 def _pallas_map(inputs: CoordSet, outputs: CoordSet, anchors, zstep,
-                *, K: int, W: int = 0, superwindow: bool = True) -> jax.Array:
+                *, K: int, W: int = 0, superwindow: bool = True):
     """Windowed Pallas z-delta search with per-tile XLA overflow fallback.
 
     Any (tile, offset-group) cell whose queries ran past the DMA'd window
     is recomputed by the XLA search; `lax.cond` keeps the fallback off the
     execution path when nothing overflowed (the common case once the
-    tuner's ``plan_superwindow`` sizes W exactly).
+    tuner's ``plan_superwindow`` sizes W exactly). Returns
+    ``(map, overflowed_cells)`` — the overflow count is a degradation
+    *signal* (the map itself is exact either way) that the plan exports in
+    ``NetworkPlan.stats``.
 
     Outputs are PAD-padded here to a multiple of ``PLAN_BM`` so the kernel
     always runs full 128-row tiles regardless of the caller's capacity
@@ -128,20 +144,24 @@ def _pallas_map(inputs: CoordSet, outputs: CoordSet, anchors, zstep,
         bad = jnp.repeat(jnp.repeat(ovf > 0, bm, axis=0), K, axis=1)[:mcap]
         return jnp.where(bad, m_x, m_p)
 
-    return jax.lax.cond(ovf.sum() > 0, patched, lambda: m_p)
+    m = jax.lax.cond(ovf.sum() > 0, patched, lambda: m_p)
+    return m, (ovf > 0).sum().astype(jnp.int32)
 
 
 def _layer_map(inputs: CoordSet, outputs: CoordSet, s: SpConvSpec,
-               layout: BitLayout, engine: str) -> jax.Array:
-    """One layer's kernel map, symmetry-aware for submanifold layers."""
+               layout: BitLayout, engine: str):
+    """One layer's kernel map, symmetry-aware for submanifold layers.
+    Returns ``(map, window_overflow_cells)`` — the counter is 0 for every
+    non-Pallas engine (their searches have no window to overflow)."""
+    no_ovf = jnp.zeros((), jnp.int32)
     stride = s.offset_stride
     if engine in ("bsearch", "hash"):
         offs = pack_offsets(jnp.asarray(offset_grid(s.K, stride)), layout)
         if engine == "bsearch":
-            return simple_bsearch(inputs, outputs, offs, K=s.K)
+            return simple_bsearch(inputs, outputs, offs, K=s.K), no_ovf
         tk, tv = hashmap.build_table(
             inputs, table_size=hashmap.table_size_for(inputs.capacity))
-        return hashmap.hash_kernel_map(tk, tv, outputs, offs, K=s.K)
+        return hashmap.hash_kernel_map(tk, tv, outputs, offs, K=s.K), no_ovf
     if engine not in ("zdelta", "zdelta_pallas", "zdelta_pallas_window"):
         raise ValueError(f"unknown engine {engine!r}")
 
@@ -154,15 +174,15 @@ def _layer_map(inputs: CoordSet, outputs: CoordSet, s: SpConvSpec,
     if engine == "zdelta":
         if use_sym:
             return zdelta_search_symmetric(inputs, outputs, anchors, zstep,
-                                           K=s.K)
-        return zdelta_search(inputs, outputs, anchors, zstep, K=s.K)
+                                           K=s.K), no_ovf
+        return zdelta_search(inputs, outputs, anchors, zstep, K=s.K), no_ovf
     if use_sym:
         anchors = anchors[: symmetry_anchor_count(s.K)]
-    m = _pallas_map(inputs, outputs, anchors, zstep, K=s.K, W=s.window,
-                    superwindow=(engine == "zdelta_pallas"))
+    m, ovf = _pallas_map(inputs, outputs, anchors, zstep, K=s.K, W=s.window,
+                         superwindow=(engine == "zdelta_pallas"))
     if use_sym:
         m = symmetrize_kernel_map(expand_half_map(m, K=s.K), K=s.K)
-    return m
+    return m, ovf
 
 
 @partial(jax.jit, static_argnames=("specs", "layout", "engine",
@@ -205,12 +225,14 @@ def build_network_plan(
         levels, downsample_all(v0, layout, levels, method=downsample_method)))
 
     kmaps: Dict[str, KernelMap] = {}
+    stats: Dict[str, jax.Array] = {}
     for s in specs:
         inputs, outputs = coords[s.m_in], coords[s.m_out]
-        m = _layer_map(inputs, outputs, s, layout, engine)
+        m, ovf = _layer_map(inputs, outputs, s, layout, engine)
         kmaps[s.name] = KernelMap(m=m, out_count=outputs.count,
                                   in_count=inputs.count)
-    return NetworkPlan(coords=coords, kmaps=kmaps)
+        stats[s.name] = ovf
+    return NetworkPlan(coords=coords, kmaps=kmaps, stats=stats)
 
 
 def sequential_plan_fns(specs: Tuple[SpConvSpec, ...], layout: BitLayout):

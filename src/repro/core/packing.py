@@ -54,12 +54,38 @@ class BitLayout:
     Default mirrors the paper's evaluation split: 12/12/8 bits for x/y/z in a
     32-bit word; the batch field is prepended. ``bits_total <= 31`` uses int32
     (sign bit kept clear), otherwise int64 (``bits_total <= 63``).
+
+    ``guard`` records the guard band the layout was sized for (module
+    docstring); validation (``core.validate``) checks real coordinates
+    against ``data_range`` = ``[guard, 2^b - guard)`` per field.
+
+    Width is validated at *construction* — a layout that cannot fit an
+    integer word fails here with the field split in hand, not later at the
+    first ``.dtype`` lookup deep inside a plan build.
     """
 
     bx: int = 12
     by: int = 12
     bz: int = 8
     bb: int = 0  # batch bits (0 => single scene)
+    guard: int = 16
+
+    def __post_init__(self):
+        if min(self.bx, self.by, self.bz) < 1 or self.bb < 0:
+            raise ValueError(f"BitLayout needs bx/by/bz >= 1 and bb >= 0, "
+                             f"got bx={self.bx} by={self.by} bz={self.bz} "
+                             f"bb={self.bb}")
+        if self.guard < 1 or self.guard & (self.guard - 1):
+            raise ValueError(f"BitLayout guard must be a power of two >= 1, "
+                             f"got {self.guard}")
+        if self.bits_total > 63:
+            raise ValueError(
+                f"BitLayout too wide: bx={self.bx} + by={self.by} + "
+                f"bz={self.bz} + bb={self.bb} = {self.bits_total} bits, but "
+                f"64-bit packing keeps the sign bit clear (max 63). Shrink "
+                f"the grid extents, lower the guard band (guard="
+                f"{self.guard} adds ceil(log2(extent + 2*guard)) bits per "
+                f"axis), or voxelize coarser.")
 
     @property
     def bits_total(self) -> int:
@@ -94,15 +120,42 @@ class BitLayout:
         """(batch, x, y, z) max representable exclusive bounds."""
         return (1 << self.bb if self.bb else 1, 1 << self.bx, 1 << self.by, 1 << self.bz)
 
+    def data_range(self) -> Tuple[Tuple[int, int], ...]:
+        """Per-axis (lo, hi) *exclusive-hi* bounds real (guard-biased)
+        coordinates must satisfy: ``[guard, 2^b - guard)`` for x, y, z —
+        the guard-band contract (module docstring) that ``core.validate``
+        enforces at the SparseTensor boundary."""
+        g = self.guard
+        return tuple((g, (1 << b) - g) for b in (self.bx, self.by, self.bz))
+
     @classmethod
     def for_extent(cls, ex: int, ey: int, ez: int, batch: int = 1,
                    guard: int = 16) -> "BitLayout":
         """Smallest layout covering a grid extent plus a ``guard`` band on
-        each side (see module docstring for the guard contract)."""
-        assert guard & (guard - 1) == 0, "guard must be a power of two"
+        each side (see module docstring for the guard contract).
+
+        Raises at build time — with the per-axis bit budget in the message —
+        when the extents need more than the 63 packable bits, instead of
+        failing later at the first ``.dtype`` lookup."""
+        assert guard >= 1 and guard & (guard - 1) == 0, \
+            "guard must be a power of two"
         need = lambda n: max(1, int(np.ceil(np.log2(max(2, int(n) + 2 * guard)))))
-        return cls(bx=need(ex), by=need(ey), bz=need(ez),
-                   bb=_batch_bits(batch))
+        bits = {"x": need(ex), "y": need(ey), "z": need(ez)}
+        bb = _batch_bits(batch)
+        total = sum(bits.values()) + bb
+        if total > 63:
+            per_axis = ", ".join(
+                f"{ax}: extent {e} + 2*{guard} guard -> {bits[ax]} bits"
+                for ax, e in zip("xyz", (ex, ey, ez)))
+            raise ValueError(
+                f"BitLayout.for_extent({ex}, {ey}, {ez}, batch={batch}, "
+                f"guard={guard}) needs {total} bits ({per_axis}"
+                f"{f', batch -> {bb} bits' if bb else ''}) but packing "
+                f"allows at most 63. Shrink the offending extents, reduce "
+                f"the guard band, lower the batch size, or voxelize "
+                f"coarser.")
+        return cls(bx=bits["x"], by=bits["y"], bz=bits["z"], bb=bb,
+                   guard=guard)
 
     def with_batch(self, batch: int) -> "BitLayout":
         """Same x/y/z fields, batch field sized for ``batch`` scenes.
@@ -128,6 +181,13 @@ def pack(coords: jax.Array, layout: BitLayout, batch: jax.Array | None = None) -
     ``batch`` (optional, same leading shape) goes in the most-significant
     field. Works natively under jit; the output is sorted-order compatible
     with lexicographic (batch, x, y, z) order.
+
+    This function is a raw bit-field encoder and does NOT bounds-check: a
+    negative or out-of-field component silently bleeds into the neighboring
+    field (voxel aliasing). The (x, y, z in ``layout.data_range()``)
+    contract is *enforced* at the data boundary —
+    ``SparseTensor.from_point_cloud(validate=...)`` via ``core.validate`` —
+    so everything downstream of a SparseTensor may assume it.
     """
     dt = layout.dtype
     x = coords[..., 0].astype(dt)

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .packing import BitLayout, pack, unpack
+from .validate import ValidationError, ValidationReport, validate_point_cloud
 from .voxel import pad_value
 
 
@@ -83,6 +84,10 @@ class SparseTensor:
     packed: jax.Array     # [cap] sorted valid prefix, PAD tail
     count: jax.Array      # int32 scalar — valid rows
     layout: BitLayout
+    # ingest accounting from the constructors' validation pass (host-side
+    # metadata, NOT part of the pytree — it does not survive jit boundaries)
+    validation: Optional[ValidationReport] = dataclasses.field(
+        default=None, compare=False)
 
     def tree_flatten(self):
         return (self.features, self.packed, self.count), self.layout
@@ -111,13 +116,21 @@ class SparseTensor:
     @classmethod
     def from_point_cloud(cls, coords, features, layout: BitLayout, *,
                          capacity: Optional[int] = None,
-                         scene_id: int = 0) -> "SparseTensor":
+                         scene_id: int = 0,
+                         validate: str = "reject") -> "SparseTensor":
         """One scene: guard-biased integer voxel ``coords`` [N, 3] and
         aligned ``features`` [N, C] → sorted, deduplicated SparseTensor.
 
         Duplicate voxels keep the first occurrence's features. ``scene_id``
         goes into the layout's batch field (only meaningful if
-        ``layout.bb > 0``)."""
+        ``layout.bb > 0``).
+
+        ``validate`` is the guarded-ingest policy (``core.validate`` module
+        doc): ``"reject"`` (default) raises :class:`ValidationError` on any
+        out-of-range/aliasing coordinate or non-finite feature row —
+        ``pack()``'s contract enforced at this boundary — while ``"clip"``
+        / ``"drop"`` sanitize and ``"none"`` trusts the caller. The
+        resulting report rides on ``st.validation``."""
         coords = np.asarray(coords)
         features = np.asarray(features)
         if coords.ndim != 2 or coords.shape[-1] != 3:
@@ -129,6 +142,8 @@ class SparseTensor:
         if scene_id and not layout.bb:
             raise ValueError(f"scene_id={scene_id} needs batch bits; use "
                              "layout.with_batch(B) (bb is 0)")
+        coords, features, report = validate_point_cloud(
+            coords, features, layout, policy=validate)
         b = (np.full(coords.shape[0], scene_id, np.int64)
              if layout.bb else None)
         p = np.asarray(pack(jnp.asarray(coords), layout,
@@ -144,26 +159,42 @@ class SparseTensor:
         fb = np.zeros((cap, features.shape[-1]), features.dtype)
         fb[:n] = f
         return cls(features=jnp.asarray(fb), packed=jnp.asarray(pb),
-                   count=jnp.asarray(n, jnp.int32), layout=layout)
+                   count=jnp.asarray(n, jnp.int32), layout=layout,
+                   validation=report)
 
     @classmethod
     def from_point_clouds(cls, clouds: Sequence[Tuple[np.ndarray, np.ndarray]],
                           layout: BitLayout, *,
-                          capacity: Optional[int] = None) -> "SparseTensor":
+                          capacity: Optional[int] = None,
+                          validate: str = "reject") -> "SparseTensor":
         """Pack B scenes — ``[(coords, features), ...]`` — into one batched
         SparseTensor via the layout's batch bits (see module doc).
 
         ``layout`` may be a single-scene layout (bb grows to fit B) or an
         already-batched one (bb must fit B). Scene order is preserved:
         scene i's rows are the i-th contiguous segment of the valid prefix.
+
+        ``validate`` applies per scene (:meth:`from_point_cloud`); a
+        rejection is re-raised with ``scene_index`` set so a serving engine
+        can quarantine exactly the poisoned request. ``st.validation``
+        carries the field-wise sum of the per-scene reports.
         """
         B = len(clouds)
         if B == 0:
             raise ValueError("from_point_clouds needs at least one scene")
         if (1 << layout.bb) < B:
             layout = layout.with_batch(B)
-        parts = [cls.from_point_cloud(c, f, layout, scene_id=i)
-                 for i, (c, f) in enumerate(clouds)]
+        parts = []
+        for i, (c, f) in enumerate(clouds):
+            try:
+                parts.append(cls.from_point_cloud(c, f, layout, scene_id=i,
+                                                  validate=validate))
+            except ValidationError as e:
+                raise ValidationError(f"scene {i}: {e}", report=e.report,
+                                      scene_index=i) from e
+        report = parts[0].validation
+        for s in parts[1:]:
+            report = report.merged(s.validation)
         # Batch bits are most significant: the per-scene sorted arrays
         # concatenate (in scene order) into one globally sorted array.
         p = np.concatenate([np.asarray(s.packed) for s in parts])
@@ -177,7 +208,8 @@ class SparseTensor:
         fb = np.zeros((cap, f.shape[-1]), f.dtype)
         fb[:n] = f
         return cls(features=jnp.asarray(fb), packed=jnp.asarray(pb),
-                   count=jnp.asarray(n, jnp.int32), layout=layout)
+                   count=jnp.asarray(n, jnp.int32), layout=layout,
+                   validation=report)
 
     # -- padding / splitting ---------------------------------------------
 
@@ -198,7 +230,7 @@ class SparseTensor:
             self.features,
             jnp.zeros((extra, self.channels), self.features.dtype)])
         return SparseTensor(features=fb, packed=pb, count=self.count,
-                            layout=self.layout)
+                            layout=self.layout, validation=self.validation)
 
     def scene_segments(self) -> Tuple[np.ndarray, np.ndarray]:
         """(starts, counts) of each scene's contiguous row segment, host-side.

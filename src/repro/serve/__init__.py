@@ -1,4 +1,6 @@
 from .engine import (ServeEngine, Request, PointCloudServeEngine,
                      PointCloudRequest)
 from .bucketing import BucketedPlanner, bucket_capacity, bucket_packed
-from .session import SpiraSession, compile_network
+from .session import HealthReport, SpiraSession, compile_network
+from .faults import (FakeClock, FaultySession, PoisonError, TransientError,
+                     feature_poison, poison_coords, poison_features)

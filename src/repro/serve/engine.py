@@ -15,28 +15,70 @@ indexing/caches, zero per-request compilation):
   architectures: a fixed pool of B slots shares one decode_step jit;
   requests claim a free slot, prefill into its cache region, then join the
   shared per-step decode batch; finished slots recycle without recompiling.
+
+Degraded-mode contract (PointCloudServeEngine)
+----------------------------------------------
+A request admitted to the engine always reaches a terminal ``outcome``; no
+exception from one request's data or one batch's execution ever propagates
+through :meth:`~PointCloudServeEngine.step` / :meth:`~PointCloudServeEngine.run`
+or takes a co-batched request down with it:
+
+* ``"ok"`` — served; ``logits`` / ``voxels`` hold the answer and (because a
+  batch-of-B session call is bitwise identical to B single-scene calls) the
+  answer never depends on which requests it was batched with — even when a
+  co-batched request was faulty and the batch was bisected.
+* ``"invalid"`` — the scene failed ingest validation
+  (``core.validate``; the engine packs with its ``validate=`` policy and
+  uses ``ValidationError.scene_index`` to exclude exactly the offending
+  scene, then serves the rest).
+* ``"quarantined"`` — the session failed deterministically for every batch
+  containing this request (after transient retries); isolated by bisection:
+  the failing batch is split in halves and retried until the poisoned
+  request stands alone, so B−1 innocent requests still get their exact
+  answers.
+* ``"shed"`` — admission control: the bounded queue (``max_queue``) was
+  full at submit time. Never enters the queue.
+* ``"deadline_expired"`` — the request's ``deadline`` (engine-clock units)
+  passed while it queued; finalized at drain time, before any device work
+  is spent on it.
+
+Transient session failures (classified by the injectable ``transient``
+predicate; by default :class:`repro.serve.faults.TransientError` and
+messages mentioning ``UNAVAILABLE`` / ``RESOURCE_EXHAUSTED``) are retried
+up to ``max_retries`` times with exponential backoff capped at
+``backoff_cap`` (injectable ``sleep``) before bisection treats them as
+deterministic. Every decision increments a counter exported by
+:attr:`~PointCloudServeEngine.counters` — the observability surface the
+fault-injection suite (``tests/test_faults.py``) and the CI robustness
+stage assert against. Session degradation (WS pair drops, escalation
+replans — ``serve.session.HealthReport``) rides on each request's
+``health`` and aggregates into ``counters["overflow_replans"]``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse_tensor import SparseTensor
+from repro.core.validate import ValidationError
 from repro.models import transformer as tf
 from repro.models.common import ModelConfig
+from .faults import TransientError
 
 
 # ---------------------------------------------------------------------------
 # point-cloud serving: request queue over a compiled SpiraSession
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)   # identity semantics: a request is a
+                                   # ticket, not a value (and ndarray
+                                   # fields break the generated __eq__)
 class PointCloudRequest:
     """One scene in, per-voxel logits out.
 
@@ -55,6 +97,26 @@ class PointCloudRequest:
     logits: Optional[np.ndarray] = None
     voxels: Optional[np.ndarray] = None
     done: bool = False
+    # fault-isolation surface (module doc, "Degraded-mode contract"):
+    deadline: Optional[float] = None   # engine-clock time after which the
+                                       # request is dropped unserved
+    outcome: str = "pending"           # "ok" | "invalid" | "quarantined" |
+                                       # "shed" | "deadline_expired"
+    error: Optional[str] = None        # structured message for non-ok ends
+    health: Optional[object] = None    # serve.session.HealthReport when the
+                                       # session exports one
+
+    @property
+    def finished(self) -> bool:
+        """Terminal (served OR failed) — the engine will not touch it again."""
+        return self.outcome != "pending"
+
+
+def _default_transient(e: BaseException) -> bool:
+    """Default transient-fault classifier: the harness's TransientError plus
+    the gRPC-style status names real runtimes put in message text."""
+    return (isinstance(e, TransientError)
+            or "UNAVAILABLE" in str(e) or "RESOURCE_EXHAUSTED" in str(e))
 
 
 class PointCloudServeEngine:
@@ -96,12 +158,22 @@ class PointCloudServeEngine:
 
     def __init__(self, session, max_batch: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 pack_ahead: bool = False):
-        from .session import SpiraSession
-
-        if not isinstance(session, SpiraSession):
+                 pack_ahead: bool = False,
+                 max_queue: Optional[int] = None,
+                 validate: str = "reject",
+                 max_retries: int = 2,
+                 backoff: float = 0.01,
+                 backoff_cap: float = 0.5,
+                 sleep: Callable[[float], None] = time.sleep,
+                 transient: Optional[Callable[[BaseException], bool]] = None):
+        # Duck-typed: a compiled SpiraSession or anything shaped like one
+        # (callable, with layout/num_scenes) — the fault-injection wrapper
+        # serve.faults.FaultySession drops in here.
+        if not (callable(session) and hasattr(session, "layout")
+                and hasattr(session, "num_scenes")):
             raise TypeError(
-                f"PointCloudServeEngine drives a compiled SpiraSession, got "
+                f"PointCloudServeEngine drives a compiled SpiraSession (or a "
+                f"duck-typed wrapper with layout/num_scenes), got "
                 f"{type(session).__name__}; build one with "
                 "repro.serve.compile_network(net, layout, batch=B).")
         self.session = session
@@ -110,44 +182,175 @@ class PointCloudServeEngine:
         self.pending: deque[PointCloudRequest] = deque()
         self._arrivals: deque[float] = deque()   # clock() at submit, aligned
         self._clock = clock                      # injectable for tests
+        self._sleep = sleep                      # injectable for tests
         self.pack_ahead = pack_ahead
+        self.max_queue = max_queue               # None = unbounded
+        self.validate = validate                 # ingest policy (core.validate)
+        self.max_retries = max_retries
+        self.backoff = backoff
+        self.backoff_cap = backoff_cap
+        self._transient = transient or _default_transient
         self.batches_run = 0
         self.scenes_served = 0
         self.packs_overlapped = 0
+        # degraded-mode counters (module doc) — the observability surface
+        self.admitted = 0
+        self.shed = 0
+        self.invalid = 0
+        self.quarantined = 0
+        self.deadline_expired = 0
+        self.retries = 0
+        self.overflow_replans = 0
 
-    def submit(self, req: PointCloudRequest) -> None:
+    @property
+    def counters(self) -> Dict[str, int]:
+        """The degraded-mode counters as one dict (for metrics export)."""
+        return {k: getattr(self, k) for k in (
+            "admitted", "shed", "invalid", "quarantined", "deadline_expired",
+            "retries", "overflow_replans", "batches_run", "scenes_served",
+            "packs_overlapped")}
+
+    def submit(self, req: PointCloudRequest) -> bool:
+        """Admit a request, or shed it (``outcome="shed"``) when the bounded
+        queue is full. Returns whether the request was admitted."""
+        if self.max_queue is not None and len(self.pending) >= self.max_queue:
+            self._finish(req, "shed",
+                         f"queue full ({self.max_queue} pending); retry later")
+            self.shed += 1
+            return False
         self.pending.append(req)
         self._arrivals.append(self._clock())
+        self.admitted += 1
+        return True
 
     # -- batch plumbing (shared by the serial step and the pipelined run) --
 
-    def _drain_batch(self) -> Tuple[List[PointCloudRequest], List[float]]:
-        """Pop up to max_batch requests with their submit timestamps (kept
-        so a failed pipelined dispatch can restore queue age exactly)."""
-        batch, arrivals = [], []
-        for _ in range(min(self.max_batch, len(self.pending))):
-            batch.append(self.pending.popleft())
-            arrivals.append(self._arrivals.popleft())
-        return batch, arrivals
+    def _finish(self, req: PointCloudRequest, outcome: str,
+                error: str) -> None:
+        req.outcome = outcome
+        req.error = error
+
+    def _drain_batch(self) -> Tuple[List[PointCloudRequest], List[float],
+                                    List[PointCloudRequest]]:
+        """Pop up to max_batch live requests with their submit timestamps.
+        Requests whose ``deadline`` has passed are finalized
+        (``deadline_expired``) here — at drain time, before any device work
+        is spent on them — and returned separately (third element)."""
+        batch, arrivals, expired = [], [], []
+        now = self._clock()
+        while self.pending and len(batch) < self.max_batch:
+            req = self.pending.popleft()
+            at = self._arrivals.popleft()
+            if req.deadline is not None and now > req.deadline:
+                self._finish(req, "deadline_expired",
+                             f"deadline {req.deadline:.3f} passed at "
+                             f"drain time {now:.3f} (queued at {at:.3f})")
+                self.deadline_expired += 1
+                expired.append(req)
+                continue
+            batch.append(req)
+            arrivals.append(at)
+        return batch, arrivals, expired
 
     def _pack(self, batch: List[PointCloudRequest]) -> SparseTensor:
         return SparseTensor.from_point_clouds(
-            [(r.coords, r.features) for r in batch], self.session.layout)
+            [(r.coords, r.features) for r in batch], self.session.layout,
+            validate=self.validate)
 
-    def _answer(self, batch: List[PointCloudRequest], out) -> None:
+    def _answer(self, batch: List[PointCloudRequest], out, health) -> None:
         """Scatter per-scene logits back onto the requests. Materializes
         device results (the blocking point the pipelined run overlaps)."""
         for req, scene in zip(batch, out.unbatch()):
             n = int(scene.count)
             req.logits = np.asarray(scene.features)[:n]
             req.voxels, _ = scene.coords()
+            req.health = health
             req.done = True
+            req.outcome = "ok"
+        if health is not None:
+            self.overflow_replans += health.replans
         self.batches_run += 1
         self.scenes_served += len(batch)
 
+    # -- fault isolation (module doc, "Degraded-mode contract") ----------
+
+    def _call_session(self, st: SparseTensor):
+        """One session call with capped-backoff retry of transient faults.
+        Raises only after ``max_retries`` transient failures (or on the
+        first non-transient one) — bisection takes over from there."""
+        attempt = 0
+        while True:
+            try:
+                if hasattr(self.session, "run_with_health"):
+                    return self.session.run_with_health(st)
+                return self.session(st), None
+            except Exception as e:
+                if not self._transient(e) or attempt >= self.max_retries:
+                    raise
+                self.retries += 1
+                self._sleep(min(self.backoff * (2 ** attempt),
+                                self.backoff_cap))
+                attempt += 1
+
+    def _serve_batch(self, batch: List[PointCloudRequest]) -> None:
+        """Pack + dispatch with full fault isolation; never raises.
+
+        Ingest rejections are attributed exactly (``ValidationError.scene_index``),
+        the offending request finalized as ``invalid``, and the remainder
+        re-packed; un-attributable failures go through :meth:`_dispatch`'s
+        bisection."""
+        if not batch:
+            return
+        try:
+            st = self._pack(batch)
+        except ValidationError as e:
+            idx = e.scene_index if e.scene_index is not None else 0
+            bad = batch[idx]
+            self._finish(bad, "invalid", str(e))
+            self.invalid += 1
+            self._serve_batch(batch[:idx] + batch[idx + 1:])
+            return
+        except Exception as e:
+            self._isolate(batch, e, "invalid")
+            return
+        self._dispatch(batch, st)
+
+    def _dispatch(self, batch: List[PointCloudRequest],
+                  st: SparseTensor) -> None:
+        """Run one packed batch; on persistent failure bisect down to the
+        poisoned request. Never raises."""
+        try:
+            out, health = self._call_session(st)
+        except Exception as e:
+            self._isolate(batch, e, "quarantined")
+            return
+        self._answer(batch, out, health)
+
+    def _isolate(self, batch: List[PointCloudRequest], exc: BaseException,
+                 outcome: str) -> None:
+        """Bisection quarantine: a failing batch splits into halves, each
+        re-packed and re-served; repeated splitting corners a deterministic
+        fault on exactly the request carrying it, while every innocent
+        request is served from a smaller batch — bitwise identical to a
+        clean run, by the session's batched-bit-identity contract."""
+        if len(batch) == 1:
+            self._finish(batch[0], outcome,
+                         f"{type(exc).__name__}: {exc}")
+            if outcome == "quarantined":
+                self.quarantined += 1
+            else:
+                self.invalid += 1
+            return
+        mid = len(batch) // 2
+        self._serve_batch(batch[:mid])
+        self._serve_batch(batch[mid:])
+
+    # -- serving loops ----------------------------------------------------
+
     def step(self, max_wait: Optional[float] = None
              ) -> List[PointCloudRequest]:
-        """Serve one batch (up to ``max_batch`` queued requests).
+        """Serve one batch (up to ``max_batch`` queued requests). Returns
+        every request finalized this step (served, failed, or expired).
 
         ``max_wait``: hold a partial batch (return ``[]``, serve nothing)
         until the oldest queued request has waited this many seconds, then
@@ -158,15 +361,18 @@ class PointCloudServeEngine:
         if (max_wait is not None and len(self.pending) < self.max_batch
                 and self._clock() - self._arrivals[0] < max_wait):
             return []
-        batch, _ = self._drain_batch()
-        self._answer(batch, self.session(self._pack(batch)))
-        return batch
+        batch, _, expired = self._drain_batch()
+        self._serve_batch(batch)
+        return batch + expired
 
     def run(self, requests: Sequence[PointCloudRequest]
             ) -> List[PointCloudRequest]:
         """Serve everything queued. ``pack_ahead=True`` uses the pipelined
         loop (class doc): pack batch t+1 on a worker thread while batch t
-        executes, with bitwise-identical answers to the serial loop."""
+        executes, with bitwise-identical answers to the serial loop. Both
+        loops uphold the degraded-mode contract (module doc): every
+        admitted request reaches a terminal outcome, and a faulty batch is
+        isolated — not lost, not raised through — in either mode."""
         for r in requests:
             self.submit(r)
         if not self.pack_ahead:
@@ -177,25 +383,20 @@ class PointCloudServeEngine:
 
         pool = ThreadPoolExecutor(max_workers=1)   # single packing worker
         try:
-            batch, _ = self._drain_batch()
-            st = self._pack(batch) if batch else None
+            batch, _, _ = self._drain_batch()
+            st = self._try_pack(batch) if batch else None
             while batch:
-                nxt, nxt_arrivals = self._drain_batch()
-                fut = pool.submit(self._pack, nxt) if nxt else None
-                try:
-                    out = self.session(st)  # async dispatch to the device
-                    self._answer(batch, out)   # blocks on device results
-                except BaseException:
-                    # batch t failed — same outcome as the serial path. But
-                    # batch t+1 was only PREFETCHED, never dispatched: put
-                    # its requests back at the head of the queue with their
-                    # ORIGINAL submit times (so a step(max_wait=) retry
-                    # still honors their true queue age), for a caller that
-                    # catches and retries.
-                    for r, at in zip(reversed(nxt), reversed(nxt_arrivals)):
-                        self.pending.appendleft(r)
-                        self._arrivals.appendleft(at)
-                    raise
+                nxt, _, _ = self._drain_batch()
+                fut = pool.submit(self._try_pack, nxt) if nxt else None
+                if isinstance(st, SparseTensor):
+                    # guarded dispatch: a session fault in batch t retries /
+                    # bisects in place — batch t is answered or error-marked,
+                    # never lost, and the prefetched batch t+1 proceeds.
+                    self._dispatch(batch, st)
+                else:
+                    # the overlapped pack failed (st is the exception):
+                    # re-pack serially through the full isolation path.
+                    self._serve_batch(batch)
                 if fut is not None and fut.done():
                     # the pack finished while the device executed — it was
                     # fully hidden (an unfinished pack would still block in
@@ -206,6 +407,15 @@ class PointCloudServeEngine:
         finally:
             pool.shutdown(wait=True)
         return list(requests)
+
+    def _try_pack(self, batch: List[PointCloudRequest]):
+        """Pack for the overlapped worker: returns the SparseTensor or the
+        exception (the worker must never raise into ``fut.result()`` —
+        the main thread routes failures through ``_serve_batch``)."""
+        try:
+            return self._pack(batch)
+        except Exception as e:
+            return e
 
 
 # ---------------------------------------------------------------------------

@@ -64,14 +64,15 @@ co-tuned on step time under ``tuner="measure"``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional, Tuple, Union
+from typing import Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import (LayerTuneResult, apply_tuning, build_network_plan,
-                        tune_layer_cost_model, tune_layer_measure,
-                        tune_segment_backend_measure, zdelta_offsets)
+                        l1_partition, tune_layer_cost_model,
+                        tune_layer_measure, tune_segment_backend_measure,
+                        zdelta_offsets)
 from repro.core.network_plan import NetworkPlan
 from repro.core.packing import BitLayout
 from repro.core.sparse_tensor import SparseTensor, ensure_sparse_tensor
@@ -83,6 +84,45 @@ from .bucketing import bucket_capacity
 
 
 @dataclasses.dataclass
+class HealthReport:
+    """Per-call degradation accounting (``SpiraSession.run_with_health``).
+
+    A healthy call has ``ws_dropped_pairs`` all zero: every (input, offset)
+    pair the lossless kernel map found was actually computed. Nonzero means
+    a WS/hybrid layer's tuned ``ws_capacity`` truncated real pairs *after
+    the session exhausted its escalation budget* — the logits are degraded
+    the same way a silently-truncated call used to be, but now it is
+    reported. ``window_overflow_cells`` is a perf signal only (overflowed
+    Pallas superwindow cells are repaired exactly by the XLA fallback)."""
+
+    bucket: int                # final padded capacity the call ran at
+    escalation: int            # escalation level of the serving plan
+                               # (ws_capacity scaled by 2^escalation)
+    replans: int               # extra plan+forward passes taken
+    ws_dropped_pairs: Dict[str, int]        # layer -> truncated pairs
+    window_overflow_cells: Dict[str, int]   # layer -> overflowed cells
+
+    @property
+    def total_ws_dropped(self) -> int:
+        return sum(self.ws_dropped_pairs.values())
+
+    @property
+    def ok(self) -> bool:
+        """No degradation: the served logits equal the lossless network's."""
+        return self.total_ws_dropped == 0
+
+    def summary(self) -> str:
+        worst = sorted(self.ws_dropped_pairs.items(), key=lambda kv: -kv[1])
+        worst = [f"{k}:{v}" for k, v in worst if v][:3]
+        return (f"bucket={self.bucket} escalation={self.escalation} "
+                f"replans={self.replans} "
+                f"ws_dropped={self.total_ws_dropped}"
+                f"{' (' + ', '.join(worst) + ')' if worst else ''} "
+                f"window_overflows="
+                f"{sum(self.window_overflow_cells.values())}")
+
+
+@dataclasses.dataclass
 class SpiraSession:
     """Compiled point-cloud pipeline: ``session(st) -> st`` of logits.
 
@@ -91,6 +131,19 @@ class SpiraSession:
     entry point; it accepts any :class:`SparseTensor` whose layout matches
     (single-scene or batched up to ``num_scenes``) and any size (bucketed
     internally).
+
+    Overflow escalation (robustness contract): WS/hybrid layers with a
+    tuned ``ws_capacity`` silently truncate pairs beyond it
+    (``dataflow.ws_kept_map``) — fine for the traffic the tuner saw, wrong
+    for a denser-than-tuned scene. Every call therefore returns the
+    dropped-pair count per lossy layer (computed inside the jitted graph
+    from the plan's own kernel map, one reduction per layer); when nonzero,
+    the session *replans at the next escalation level* — capacity bucket
+    and every tuned ``ws_capacity`` doubled — up to ``max_overflow_replans``
+    times, instead of serving truncated logits. Each escalation level is
+    its own jitted executable (the jit cache stays the bucket cache, per
+    level); traffic within tuned capacity never pays anything. See
+    :class:`HealthReport` / :meth:`run_with_health`.
     """
 
     net: PointCloudNet
@@ -104,16 +157,59 @@ class SpiraSession:
     # whole network, so every per-scene reduction shares one bit contract;
     # backend co-tuned on step time under tuner="measure"
     segment: SegmentSpec = SegmentSpec()
+    # bounded retries for pair-capacity overflow (class doc); 0 restores
+    # the old serve-truncated-but-report behavior
+    max_overflow_replans: int = 2
 
     def __post_init__(self):
         specs = self.net.conv_specs()
+        self._fns: Dict[int, object] = {}
+        self._fn = self._make_fn(0)   # escalation level 0 = the tuned plan
+        self.last_health: Optional[HealthReport] = None
+        self._plan_fn = jax.jit(
+            lambda packed: build_network_plan(
+                packed, specs=specs, layout=self.layout, engine=self.engine,
+                downsample_method=self.downsample_method))
+
+    def _escalated_net(self, esc: int) -> PointCloudNet:
+        """The network with every lossy ``ws_capacity`` scaled ``2^esc``
+        (params are capacity-independent, so they are shared across
+        levels)."""
+        if esc == 0:
+            return self.net
+        specs = tuple(
+            dataclasses.replace(s, ws_capacity=s.ws_capacity << esc)
+            if (s.ws_capacity and s.dataflow in ("ws", "hybrid")) else s
+            for s in self.net.conv_specs())
+        return dataclasses.replace(self.net, specs=specs)
+
+    def _make_fn(self, esc: int):
+        """The jitted plan+forward executable for one escalation level,
+        returning health scalars alongside the logits."""
+        fn = self._fns.get(esc)
+        if fn is not None:
+            return fn
+        net = self._escalated_net(esc)
+        specs = net.conv_specs()
         layout = self.layout
         engine = self.engine
         method = self.downsample_method
-        net = self.net
         seg_spec = self.segment
-
         out_level = specs[-1].m_out if specs else 0
+
+        # Lossy layers: WS/hybrid with an explicit pair capacity. For
+        # hybrid only the sparse (weight-stationary) offset columns can
+        # drop; the split is static (offset L1 norms), resolved here.
+        lossy = []
+        for s in specs:
+            if not s.ws_capacity or s.dataflow not in ("ws", "hybrid"):
+                continue
+            cols = None
+            if s.dataflow == "hybrid":
+                _, cols = l1_partition(s.K, s.offset_stride, s.t)
+                if cols.size == 0:
+                    continue
+            lossy.append((s.name, int(s.ws_capacity), cols))
 
         @jax.jit
         def run(params, packed, feats):
@@ -123,17 +219,31 @@ class SpiraSession:
             logits = pointcloud_forward(params, net, plan, feats,
                                         layout=layout, segment=seg_spec)
             out = plan.coords[out_level]
-            return logits, out.packed, out.count
+            # Degradation signals, computed from the plan the call already
+            # built: pairs beyond ws_capacity are exactly what
+            # dataflow.ws_kept_map will zero out.
+            drops = {}
+            for name, cap, cols in lossy:
+                m = plan.kmaps[name].m
+                mc = m if cols is None else m[:, cols]
+                pairs = (mc >= 0).sum(axis=0)
+                drops[name] = jnp.maximum(pairs - cap, 0).sum() \
+                                 .astype(jnp.int32)
+            return logits, out.packed, out.count, drops, plan.stats
 
-        self._fn = run
-        self._plan_fn = jax.jit(
-            lambda packed: build_network_plan(
-                packed, specs=specs, layout=layout, engine=engine,
-                downsample_method=method))
+        self._fns[esc] = run
+        return run
 
     # -- hot path ---------------------------------------------------------
 
     def __call__(self, st: SparseTensor) -> SparseTensor:
+        return self.run_with_health(st)[0]
+
+    def run_with_health(self, st: SparseTensor
+                        ) -> Tuple[SparseTensor, HealthReport]:
+        """Run with the escalation loop (class doc) and return
+        ``(logits, health)``. ``session(st)`` is sugar for the first
+        element; the last report also lands on ``session.last_health``."""
         ensure_sparse_tensor(st, where="SpiraSession")
         if st.layout != self.layout:
             raise ValueError(
@@ -146,13 +256,39 @@ class SpiraSession:
             raise ValueError(
                 f"SparseTensor has {st.channels} feature channels; "
                 f"{self.net.name} expects {self.net.in_channels}.")
-        stp = st.pad_to(self._bucket(st.capacity))
-        logits, out_packed, out_count = self._fn(self.params, stp.packed,
-                                                 stp.features)
+        base = self._bucket(st.capacity)
+        esc = replans = 0
+        while True:
+            bucket = self._esc_bucket(base, esc)
+            stp = st.pad_to(bucket)
+            fn = self._make_fn(esc)
+            logits, out_packed, out_count, drops, ovf = fn(
+                self.params, stp.packed, stp.features)
+            dropped = {k: int(v) for k, v in drops.items()}
+            if (sum(dropped.values()) == 0
+                    or esc >= self.max_overflow_replans):
+                break
+            esc += 1
+            replans += 1
+        health = HealthReport(
+            bucket=bucket, escalation=esc, replans=replans,
+            ws_dropped_pairs=dropped,
+            window_overflow_cells={k: int(v) for k, v in ovf.items()})
+        self.last_health = health
         # Logits live on the network's OUTPUT level coordinate set (== the
         # input set only for submanifold-ending segmentation nets).
-        return SparseTensor(features=logits, packed=out_packed,
-                            count=out_count, layout=self.layout)
+        out = SparseTensor(features=logits, packed=out_packed,
+                           count=out_count, layout=self.layout)
+        return out, health
+
+    def _esc_bucket(self, base_bucket: int, esc: int) -> int:
+        """Escalated capacity bucket: the next pow2 bucket per level,
+        clamped to ``max_bucket`` (ws_capacity keeps scaling even when the
+        bucket has hit the ceiling — it is what removes the drops)."""
+        b = base_bucket << esc
+        if self.max_bucket is not None and b > self.max_bucket:
+            b = max(base_bucket, self.max_bucket)
+        return b
 
     def compile_train(self, tcfg=None, *, opt_state=None):
         """Training entry point: a :class:`~repro.train.PointCloudTrainer`
@@ -189,10 +325,16 @@ class SpiraSession:
 
     @property
     def compile_count(self) -> int:
-        """Compiled executables so far — one per distinct capacity bucket
-        (the jit cache is the bucket cache)."""
-        cache_size = getattr(self._fn, "_cache_size", None)
-        return int(cache_size()) if cache_size is not None else -1
+        """Compiled executables so far — one per distinct (capacity bucket,
+        escalation level) pair; without overflow traffic that is exactly
+        one per bucket (the jit cache is the bucket cache)."""
+        total = 0
+        for fn in self._fns.values():
+            cache_size = getattr(fn, "_cache_size", None)
+            if cache_size is None:
+                return -1
+            total += int(cache_size())
+        return total
 
     def __repr__(self):
         return (f"SpiraSession({self.net.name}, engine={self.engine!r}, "
@@ -217,6 +359,7 @@ def compile_network(
     tuner: TunerArg = None,
     tune_sample: Optional[SparseTensor] = None,
     segment_backend: str = "auto",
+    max_overflow_replans: int = 2,
     dtype=jnp.float32,
 ) -> SpiraSession:
     """Build a :class:`SpiraSession` — the compile-once front door.
@@ -239,6 +382,9 @@ def compile_network(
           ``core.tuner.apply_tuning``.
       Tuned specs are persisted on the session's network — the session IS
       the tuner persistence.
+    * ``max_overflow_replans`` — escalation budget for pair-capacity
+      overflow (:class:`SpiraSession` class doc); 0 serves truncated logits
+      but still reports the drops in the HealthReport.
     * ``segment_backend`` — the segmented-reduction engine backend
       ("auto" | "xla" | "pallas"; ``kernels.segsum``) shared by every
       per-scene BN/pooling/loss reduction. Under ``tuner="measure"`` it is
@@ -263,7 +409,8 @@ def compile_network(
     return SpiraSession(net=net, layout=layout, params=params, engine=engine,
                         downsample_method=downsample_method,
                         min_bucket=min_bucket, max_bucket=max_bucket,
-                        segment=seg_spec)
+                        segment=seg_spec,
+                        max_overflow_replans=max_overflow_replans)
 
 
 def _tune_segment(seg_spec: SegmentSpec, tune_sample: SparseTensor, *,

@@ -150,6 +150,56 @@ def test_segment_engine_bit_invariances(sizes, pad, C, q, seed):
     np.testing.assert_array_equal(run(pargs), out[perm])
 
 
+def _boundary_vals(b: int, guard: int):
+    vals = {0, 1, guard - 1, guard, guard + 1,
+            (1 << b) - guard - 1, (1 << b) - guard, (1 << b) - 2,
+            (1 << b) - 1}
+    return sorted(v for v in vals if 0 <= v < (1 << b))
+
+
+_L32 = BitLayout(bx=10, by=9, bz=8)      # 27 bits -> int32 words
+_L64 = BitLayout(bx=22, by=21, bz=20)    # 63 bits -> int64 words
+
+
+@SET
+@given(st.sampled_from([_L32, _L64]), st.data())
+def test_pack_unpack_roundtrip_at_field_boundaries(layout, data):
+    """unpack(pack(c)) == c when every component sits ON a field boundary
+    (0, guard±1, max-in-field, max∓guard) — pack is exact across the whole
+    field for both int32 and int64 packings (the aliasing that validation
+    guards against happens only OUTSIDE the field, pinned below)."""
+    import contextlib
+
+    c = np.array(data.draw(st.lists(
+        st.tuples(st.sampled_from(_boundary_vals(layout.bx, layout.guard)),
+                  st.sampled_from(_boundary_vals(layout.by, layout.guard)),
+                  st.sampled_from(_boundary_vals(layout.bz, layout.guard))),
+        min_size=1, max_size=64)), np.int64)
+    ctx = (jax.experimental.enable_x64() if layout.bits_total > 31
+           else contextlib.nullcontext())
+    with ctx:
+        p = np.asarray(pack(jnp.asarray(c), layout))
+        assert p.dtype == (np.int32 if layout.bits_total <= 31 else np.int64)
+        back, _ = unpack(jnp.asarray(p), layout)
+        np.testing.assert_array_equal(np.asarray(back), c)
+
+
+@SET
+@given(st.integers(1, 1 << 8), st.integers(0, 2))
+def test_out_of_field_rejected_by_validation_not_wrapped(excess, axis):
+    """PINNED companion: a component past its field width aliases another
+    voxel under raw pack() — the guarded ingest boundary must reject it
+    (policy="reject") for any overflow amount, never wrap."""
+    from repro.core import SparseTensor, ValidationError
+
+    layout = BitLayout(bx=8, by=8, bz=8)
+    c = np.array([[20, 21, 22]], np.int64)
+    c[0, axis] = (1 << 8) + excess
+    f = np.zeros((1, 3), np.float32)
+    with pytest.raises(ValidationError):
+        SparseTensor.from_point_cloud(c, f, layout)
+
+
 @SET
 @given(st.integers(0, 2 ** 31 - 2), st.integers(1, 64))
 def test_sorted_query_positions_monotone(x0, span):
