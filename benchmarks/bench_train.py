@@ -93,6 +93,13 @@ def run(smoke: bool = False):
         trainer.step(st, labels)                  # compile + first step
         compile_s = time.perf_counter() - t0
         t_step = timeit(lambda: trainer.step(st, labels), repeats=5, warmup=1)
+        # the self-healing wrapper (train.guard): same fused step plus one
+        # in-graph isfinite flag + per-leaf selects and the host-side
+        # ladder bookkeeping — guard_overhead prices "always-on" safety
+        gtrainer = session.compile_train(PointCloudTrainConfig(), guard=True)
+        gtrainer.step(st, labels)                 # compile the guarded graph
+        t_gstep = timeit(lambda: gtrainer.step(st, labels),
+                         repeats=5, warmup=1)
         t_fwd = timeit(lambda: session(st).features, repeats=5, warmup=1)
         t_plan = timeit(lambda: session.plan(st).coords[0].packed,
                         repeats=5, warmup=1)
@@ -106,6 +113,8 @@ def run(smoke: bool = False):
             "plan_us": us(t_plan),
             "fwd_us": us(t_fwd),
             "step_us": us(t_step),
+            "guarded_step_us": us(t_gstep),
+            "guard_overhead": round(t_gstep / t_step, 3),
             "bwd_over_fwd": round(t_step / t_fwd, 3),
             "plan_share_of_step": round(t_plan / t_step, 3),
             "bn_us_segment": us(t_bn_seg),
@@ -122,6 +131,8 @@ def run(smoke: bool = False):
         rows.append((f"train/{engine}/fwd", us(t_fwd), ""))
         rows.append((f"train/{engine}/step", us(t_step),
                      f"bwd_over_fwd={rec['bwd_over_fwd']}"))
+        rows.append((f"train/{engine}/guarded_step", us(t_gstep),
+                     f"overhead={rec['guard_overhead']}"))
         rows.append((f"train/{engine}/bn_segment", us(t_bn_seg),
                      f"share_of_step={rec['bn_share_of_step']}"))
         rows.append((f"train/{engine}/bn_sliced", us(t_bn_sliced),

@@ -69,6 +69,25 @@ python examples/pointcloud_serve.py --smoke >/dev/null
 # (the example asserts final < initial and a bit-exact ckpt round-trip)
 python examples/train_pointcloud.py --smoke >/dev/null
 
+# train-robustness: the training stack's degraded-mode contract
+# (train.guard + hardened ckpt.manager). A NaN-poisoned batch must be a
+# bitwise no-op that bisection turns into quarantine + healthy commits
+# (guarded run == clean run on the healthy work alone, BITWISE), a
+# corrupted latest checkpoint must fall back to the newest verifying one,
+# a preemption between the .npz and its manifest must leave a rejectable
+# orphan the next resume walks past, and async writer failures must
+# surface — plus the self-healing example end to end (poisoned batches +
+# corrupt checkpoint + resume in one run).
+python -m pytest -x -q \
+  "tests/test_train_guard.py::test_nonfinite_batch_is_bitwise_noop[nan]" \
+  tests/test_train_guard.py::test_poisoned_run_bitwise_equals_clean_run_on_healthy_work \
+  tests/test_train_guard.py::test_resume_walks_past_corrupt_latest \
+  tests/test_train_guard.py::test_rollback_restores_last_good \
+  tests/test_ckpt_robust.py::test_fallback_walks_to_newest_verifying \
+  tests/test_ckpt_robust.py::test_preempted_save_leaves_rejectable_orphan \
+  tests/test_ckpt_robust.py::test_async_write_failure_reraised_on_next_save
+python examples/robust_train.py --smoke >/dev/null
+
 # train bench must stay runnable (writes BENCH_train.json: fwd vs fwd+bwd
 # step latency + the plan's share of a step)
 python -m benchmarks.bench_train --smoke >/dev/null

@@ -1,1 +1,3 @@
-from .manager import CheckpointManager
+from .manager import (CheckpointCorruptionError, CheckpointError,
+                      CheckpointManager, CheckpointNotFoundError,
+                      CheckpointWriteError)

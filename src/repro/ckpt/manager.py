@@ -1,23 +1,100 @@
 """Fault-tolerant checkpointing: atomic writes, keep-last-k, async save,
-reshard-on-load (elastic restarts across different mesh shapes).
+checksummed restore with fallback, reshard-on-load (elastic restarts across
+different mesh shapes).
 
-Format: one ``.npz`` per checkpoint holding the flattened (path → array)
-tree plus a small JSON manifest (step, tree structure). Arrays are written
-*fully replicated logical values* — on load, shardings for the *current*
-mesh are re-applied via ``jax.device_put``, so a job checkpointed on a
-2-pod mesh restarts cleanly on 1 pod or 4 (elastic scaling). Writes go to a
-temp file + ``os.replace`` (atomic on POSIX), so a preemption mid-write
-never corrupts the latest checkpoint.
+Checkpoint + manifest format (version 2)
+----------------------------------------
+One checkpoint ``step`` is two files, written in this order:
+
+* ``ckpt_{step:08d}.npz`` — the flattened (path → array) trees, one entry
+  per array keyed ``"{group}::{path}"`` (groups: ``params``, ``opt``).
+* ``ckpt_{step:08d}.json`` — the manifest::
+
+      {"step": int, "format": 2,
+       "checksums": {"params::layer/w": crc32, ...},   # zlib.crc32 of each
+       ...extra}                                        # array's raw bytes
+
+Both files go to a temp name + ``os.replace`` (atomic on POSIX), so a
+preemption mid-write never corrupts an existing checkpoint — but a
+preemption *between* the two replaces leaves an orphan ``.npz`` with no
+manifest. The manifest is therefore the commit record: a checkpoint is
+**complete** iff its manifest exists, and :meth:`CheckpointManager.restore`
+treats a manifest-less ``.npz`` as corrupt (:class:`CheckpointCorruptionError`)
+rather than trusting unverifiable bytes. ``_gc`` removes both orphan kinds
+(``.npz`` without ``.json`` and vice versa) once they are not the newest
+write in flight.
+
+Integrity contract
+------------------
+``restore`` verifies every array against the manifest's CRC32 before
+returning (``verify=False`` opts out); any mismatch, unreadable file or
+missing key raises :class:`CheckpointCorruptionError` naming the file and
+the first bad key. ``restore(..., fallback=True)`` instead walks back to
+the **newest checkpoint that verifies** (counting failures in
+``verify_failures``), so a torn or bit-rotted latest checkpoint costs the
+steps since the previous one, not the run. Manifests from format < 2
+(no checksums) restore without verification — back-compat, not a failure.
+
+The ``last_good`` tag
+---------------------
+``mark_last_good(step)`` atomically records a step in ``last_good.json``.
+The tagged checkpoint is **exempt from GC**, so it survives the keep-k
+window; the training guard (``train.guard``) advances the tag only after a
+checkpoint has been followed by N healthy steps, making it the rollback
+anchor for self-healing training.
+
+Async-writer errors
+-------------------
+With ``async_save=True`` the disk write runs on a daemon thread. Its
+exceptions are captured (never silently lost) and re-raised as
+:class:`CheckpointWriteError` from the next ``save()`` / ``wait()`` call —
+the first moment the caller can observe them.
 """
 from __future__ import annotations
 
 import json
 import os
 import threading
-from typing import Any, Optional, Tuple
+import zlib
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import numpy as np
+
+MANIFEST_FORMAT = 2
+LAST_GOOD_FILE = "last_good.json"
+
+
+class CheckpointError(RuntimeError):
+    """Base class for typed checkpoint failures."""
+
+
+class CheckpointNotFoundError(CheckpointError):
+    """No checkpoint exists (at the requested step, or at all)."""
+
+    def __init__(self, directory: str, step: Optional[int] = None):
+        self.directory = directory
+        self.step = step
+        what = (f"step {step}" if step is not None else "any step")
+        super().__init__(f"no checkpoint found for {what} in {directory!r}")
+
+
+class CheckpointCorruptionError(CheckpointError):
+    """A checkpoint failed integrity verification. Names the offending file
+    and (when the failure is array-level) the first bad key, so operators
+    can tell a torn write from targeted corruption."""
+
+    def __init__(self, path: str, *, key: Optional[str] = None,
+                 reason: str = "checksum mismatch"):
+        self.path = path
+        self.key = key
+        self.reason = reason
+        at = f" (first bad key: {key!r})" if key is not None else ""
+        super().__init__(f"corrupt checkpoint {path!r}: {reason}{at}")
+
+
+class CheckpointWriteError(CheckpointError):
+    """A deferred async-save failure, re-raised on the next save()/wait()."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -29,31 +106,57 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return out
 
 
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._write_error: Optional[BaseException] = None
+        self.verify_failures = 0      # checkpoints that failed verification
+        # fault-injection seam (train.faults.preempt_between_files): called
+        # after the .npz lands but before the manifest — a raise here models
+        # a preemption between the two atomic replaces.
+        self._post_npz_hook: Optional[Callable[[int], None]] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, params, opt_state=None, extra: dict | None = None):
         """Snapshot to host memory synchronously (cheap), write to disk
-        off-thread (async) so the training step never blocks on IO."""
+        off-thread (async) so the training step never blocks on IO.
+        Raises :class:`CheckpointWriteError` if the *previous* async write
+        failed (its exception was captured, not lost — module doc)."""
         blob = {"params": _flatten(params)}
         if opt_state is not None:
             blob["opt"] = _flatten(opt_state)
         meta = {"step": step, **(extra or {})}
-        if self._thread is not None:
-            self._thread.join()  # backpressure: at most one write in flight
+        self._join_writer()   # backpressure: at most one write in flight;
+                              # also surfaces the previous write's error
         if self.async_save:
             self._thread = threading.Thread(
-                target=self._write, args=(step, blob, meta), daemon=True)
+                target=self._write_captured, args=(step, blob, meta),
+                daemon=True)
             self._thread.start()
         else:
             self._write(step, blob, meta)
+
+    def _write_captured(self, step: int, blob: dict, meta: dict):
+        """Async-writer target: capture, never swallow (module doc)."""
+        try:
+            self._write(step, blob, meta)
+        except BaseException as e:           # noqa: BLE001 — deferred reraise
+            self._write_error = e
+
+    def _write_npz(self, tmp: str, arrays: dict) -> None:
+        """The raw array write — a seam so fault tests can inject a failing
+        writer (disk full, torn write) without touching real IO paths."""
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
 
     def _write(self, step: int, blob: dict, meta: dict):
         path = os.path.join(self.dir, f"ckpt_{step:08d}.npz")
@@ -62,53 +165,180 @@ class CheckpointManager:
         for group, tree in blob.items():
             for k, v in tree.items():
                 arrays[f"{group}::{k}"] = v
-        with open(tmp, "wb") as f:
-            np.savez(f, **arrays)
+        self._write_npz(tmp, arrays)
         os.replace(tmp, path)  # atomic
+        if self._post_npz_hook is not None:
+            self._post_npz_hook(step)
+        meta = {**meta, "format": MANIFEST_FORMAT,
+                "checksums": {k: _crc(v) for k, v in arrays.items()}}
         mpath = os.path.join(self.dir, f"ckpt_{step:08d}.json")
         with open(mpath + ".tmp", "w") as f:
             json.dump(meta, f)
-        os.replace(mpath + ".tmp", mpath)
+        os.replace(mpath + ".tmp", mpath)  # the commit record (module doc)
         self._gc()
 
-    def wait(self):
+    def _join_writer(self):
         if self._thread is not None:
             self._thread.join()
+            self._thread = None
+        if self._write_error is not None:
+            e, self._write_error = self._write_error, None
+            raise CheckpointWriteError(
+                f"previous async checkpoint write failed: "
+                f"{type(e).__name__}: {e}") from e
+
+    def wait(self):
+        """Block until the in-flight write lands; re-raise its failure."""
+        self._join_writer()
 
     def _gc(self):
-        ckpts = sorted(self.steps())
-        for s in ckpts[: -self.keep]:
+        """Keep the newest ``keep`` complete checkpoints plus the
+        ``last_good`` tag's step; remove orphans of both kinds (module
+        doc) — except the newest .npz, which may be a write whose manifest
+        is still in flight."""
+        keep_good = self.last_good_step()
+        complete = self.complete_steps()
+        victims = set(complete[: -self.keep] if self.keep else complete)
+        npz = set(self._steps_with(".npz"))
+        man = set(self._steps_with(".json"))
+        victims |= man - npz                       # orphan manifests
+        newest = max(npz) if npz else None         # manifest may be in flight
+        victims |= {s for s in npz - man if s != newest}   # orphan npz
+        for s in victims:
+            if s == keep_good:
+                continue
             for ext in (".npz", ".json"):
                 try:
                     os.remove(os.path.join(self.dir, f"ckpt_{s:08d}{ext}"))
                 except FileNotFoundError:
                     pass
 
+    # -- the last_good tag (module doc) -------------------------------------
+
+    def mark_last_good(self, step: int) -> None:
+        """Atomically tag ``step`` as the verified rollback anchor. Waits
+        for any in-flight write first (the tag must never lead the data)."""
+        self._join_writer()
+        if step not in self.complete_steps():
+            raise CheckpointNotFoundError(self.dir, step)
+        p = os.path.join(self.dir, LAST_GOOD_FILE)
+        with open(p + ".tmp", "w") as f:
+            json.dump({"step": step}, f)
+        os.replace(p + ".tmp", p)
+
+    def last_good_step(self) -> Optional[int]:
+        try:
+            with open(os.path.join(self.dir, LAST_GOOD_FILE)) as f:
+                return int(json.load(f)["step"])
+        except (FileNotFoundError, ValueError, KeyError,
+                json.JSONDecodeError):
+            return None
+
     # -- load ---------------------------------------------------------------
 
-    def steps(self) -> list[int]:
+    def _steps_with(self, ext: str) -> list[int]:
         out = []
         for f in os.listdir(self.dir):
-            if f.startswith("ckpt_") and f.endswith(".npz"):
-                out.append(int(f[5:13]))
+            if f.startswith("ckpt_") and f.endswith(ext) and len(f) == 13 + len(ext):
+                try:
+                    out.append(int(f[5:13]))
+                except ValueError:
+                    pass
         return sorted(out)
+
+    def steps(self) -> list[int]:
+        return self._steps_with(".npz")
+
+    def complete_steps(self) -> list[int]:
+        """Steps whose manifest landed — the restorable set (module doc)."""
+        return sorted(set(self._steps_with(".npz"))
+                      & set(self._steps_with(".json")))
 
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
 
     def restore(self, step: Optional[int], params_template,
-                opt_template=None, shardings=None, opt_shardings=None
+                opt_template=None, shardings=None, opt_shardings=None, *,
+                verify: bool = True, fallback: bool = False
                 ) -> Tuple[Any, Any, int]:
         """Restore into the *current* mesh: each array is device_put with the
         template's sharding (or the provided shardings tree), making restarts
-        elastic across mesh shapes."""
-        if step is None:
-            step = self.latest_step()
-        assert step is not None, "no checkpoint found"
+        elastic across mesh shapes.
+
+        ``step=None`` restores the newest checkpoint. ``verify=True``
+        (default) checks every array against the manifest CRC32 and raises
+        :class:`CheckpointCorruptionError` (file + first bad key) on any
+        mismatch, missing manifest, or unreadable npz. ``fallback=True``
+        walks back — newest first, starting at ``step`` when given — to the
+        newest checkpoint that verifies (module doc); every rejected
+        candidate increments ``verify_failures``."""
+        self._join_writer()   # a restore must see the last write (or its error)
+        steps = self.steps()
+        if step is not None and step not in steps:
+            raise CheckpointNotFoundError(self.dir, step)
+        candidates = sorted((s for s in steps if step is None or s <= step),
+                            reverse=True)
+        if not candidates:
+            raise CheckpointNotFoundError(self.dir,
+                                          step if step is not None else None)
+        if not fallback:
+            candidates = candidates[:1]
+        err: Optional[CheckpointCorruptionError] = None
+        for s in candidates:
+            try:
+                return self._restore_one(s, params_template, opt_template,
+                                         shardings, opt_shardings,
+                                         verify=verify)
+            except CheckpointCorruptionError as e:
+                self.verify_failures += 1
+                if err is None:
+                    err = e           # report the NEWEST failure
+        assert err is not None
+        if fallback and len(candidates) > 1:
+            raise CheckpointCorruptionError(
+                err.path, key=err.key,
+                reason=f"{err.reason}; all {len(candidates)} candidate "
+                       f"checkpoints failed verification") from err
+        raise err
+
+    def _restore_one(self, step: int, params_template, opt_template,
+                     shardings, opt_shardings, *, verify: bool
+                     ) -> Tuple[Any, Any, int]:
         path = os.path.join(self.dir, f"ckpt_{step:08d}.npz")
-        with np.load(path) as z:
-            data = {k: z[k] for k in z.files}
+        mpath = os.path.join(self.dir, f"ckpt_{step:08d}.json")
+        try:
+            with open(mpath) as f:
+                meta = json.load(f)
+        except FileNotFoundError:
+            if verify:
+                raise CheckpointCorruptionError(
+                    mpath, reason="manifest missing — the write was "
+                                  "preempted between the .npz and its "
+                                  "manifest (module doc); the .npz alone "
+                                  "is unverifiable") from None
+            meta = {"step": step}   # verify=False: trust the filename
+        except (ValueError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptionError(
+                mpath, reason=f"unreadable manifest ({e})") from e
+        try:
+            with np.load(path) as z:
+                data = {k: z[k] for k in z.files}
+        except FileNotFoundError:
+            raise CheckpointNotFoundError(self.dir, step) from None
+        except Exception as e:   # BadZipFile / truncated / mmap failures
+            raise CheckpointCorruptionError(
+                path, reason=f"unreadable npz ({type(e).__name__}: {e})"
+            ) from e
+        checksums = meta.get("checksums")
+        if verify and checksums is not None:
+            for k in sorted(checksums):
+                if k not in data:
+                    raise CheckpointCorruptionError(
+                        path, key=k, reason="array listed in the manifest "
+                                            "is missing from the npz")
+                if _crc(data[k]) != checksums[k]:
+                    raise CheckpointCorruptionError(path, key=k)
 
         def rebuild(template, group, shard_tree):
             flat, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -118,6 +348,11 @@ class CheckpointManager:
             for (pathk, leaf), sh in zip(flat, sflat):
                 key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                                for p in pathk)
+                if f"{group}::{key}" not in data:
+                    raise CheckpointCorruptionError(
+                        path, key=f"{group}::{key}",
+                        reason="array required by the restore template is "
+                               "missing from the npz")
                 arr = data[f"{group}::{key}"]
                 if sh is not None:
                     leaves.append(jax.device_put(arr, sh))
@@ -128,4 +363,4 @@ class CheckpointManager:
         params = rebuild(params_template, "params", shardings)
         opt = (rebuild(opt_template, "opt", opt_shardings)
                if opt_template is not None else None)
-        return params, opt, step
+        return params, opt, int(meta.get("step", step))

@@ -290,7 +290,8 @@ class SpiraSession:
             b = max(base_bucket, self.max_bucket)
         return b
 
-    def compile_train(self, tcfg=None, *, opt_state=None):
+    def compile_train(self, tcfg=None, *, opt_state=None, guard=None,
+                      ckpt=None, resume: bool = False):
         """Training entry point: a :class:`~repro.train.PointCloudTrainer`
         bound to this session.
 
@@ -301,9 +302,36 @@ class SpiraSession:
         immediately. The backward pass reuses the forward plan via the
         kernel-map-transposed custom VJPs in ``core.dataflow`` — zero extra
         kernel-map searches per step (``train.pointcloud`` module doc).
+
+        Any of ``guard`` / ``ckpt`` / ``resume`` upgrades the result to a
+        :class:`~repro.train.guard.GuardedPointCloudTrainer` — the
+        self-healing trainer (``train.guard`` module doc): in-graph
+        non-finite skip, loss-spike skip, per-scene bisection quarantine,
+        checkpoint rollback, typed abort.
+
+        * ``guard`` — a :class:`~repro.train.guard.GuardConfig`, or
+          ``True`` for the defaults.
+        * ``ckpt`` — a :class:`~repro.ckpt.CheckpointManager` or a
+          directory path; enables the auto-checkpoint cadence
+          (``GuardConfig.ckpt_every``), the ``last_good`` rollback anchor
+          and crash-safe resume.
+        * ``resume=True`` — restore the newest *verifying* checkpoint from
+          ``ckpt`` before the first step (torn/corrupt checkpoints are
+          walked past), so a restarted run continues instead of starting
+          over.
         """
-        from repro.train.pointcloud import PointCloudTrainer
-        return PointCloudTrainer(self, tcfg, opt_state=opt_state)
+        if guard is None and ckpt is None and not resume:
+            from repro.train.pointcloud import PointCloudTrainer
+            return PointCloudTrainer(self, tcfg, opt_state=opt_state)
+        from repro.train.guard import GuardConfig, GuardedPointCloudTrainer
+        if guard is True:
+            guard = GuardConfig()
+        if resume and ckpt is None:
+            raise ValueError("compile_train(resume=True) needs ckpt= (a "
+                             "CheckpointManager or directory) to resume "
+                             "from")
+        return GuardedPointCloudTrainer(self, tcfg, guard=guard, ckpt=ckpt,
+                                        opt_state=opt_state, resume=resume)
 
     def plan(self, st: SparseTensor) -> NetworkPlan:
         """The network plan the session would use for ``st`` (bucketed) —

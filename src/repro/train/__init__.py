@@ -2,6 +2,11 @@ from .optimizer import AdamWConfig, OptState, init_opt_state, apply_updates
 from .loop import TrainConfig, make_train_step, train
 from .pointcloud import (PointCloudTrainConfig, PointCloudTrainer,
                          labeled_batch, labeled_tensor,
-                         make_pointcloud_train_step, scene_features,
+                         make_pointcloud_train_step,
+                         make_segmentation_loss_fn, scene_features,
                          scene_pool, segmentation_loss)
+from .guard import (GuardConfig, GuardedPointCloudTrainer, LossSpikeDetector,
+                    TrainAbortError, TrainHealthReport,
+                    guarded_apply_updates, make_guarded_train_step)
 from . import compression
+from . import faults

@@ -1,0 +1,151 @@
+"""Fault-injection harness for the training stack (tests + the ci.sh
+``train-robustness`` stage) — the train-side sibling of ``serve.faults``.
+
+Training robustness claims (``train.guard`` module doc) are only as good
+as the faults they were exercised against, so this module makes every
+failure mode the guarded trainer defends against *injectable and
+deterministic*:
+
+* **NaN/Inf poison past the ingest boundary** — :func:`poison_nonfinite`
+  plants non-finite values directly into a *packed* SparseTensor's device
+  features. The ingest validator (``core.validate``, policy ``"reject"``)
+  refuses non-finite features at construction, so faults of this class by
+  definition arise *after* validation (device bit-flips, a buggy
+  augmentation stage, an upstream kernel writing garbage) — exactly the
+  model ``serve.faults.poison_features`` uses for finite poison. Exercises
+  the in-graph all-finite flag and bisection quarantine.
+* **Label poison** — :func:`poison_labels` plants finite out-of-range
+  class ids. ``segmentation_loss`` clips them (wrong-but-finite loss), so
+  these exercise the *spike detector* rung of the ladder, not the
+  non-finite flag.
+* **On-disk checkpoint corruption** — :func:`corrupt_checkpoint`
+  byte-flips or truncates a checkpoint's ``.npz`` in place; exercises
+  CRC32 verify-on-restore and ``restore(fallback=True)``.
+* **Preemption between the two atomic replaces** —
+  :func:`preempt_between_files` arms the manager's ``_post_npz_hook`` so
+  the next save dies after the ``.npz`` lands but before its manifest —
+  the torn-checkpoint state ``ckpt.manager``'s module doc names as the one
+  atomic writes cannot prevent. Exercises orphan handling in ``_gc`` and
+  manifest-less-npz rejection in ``restore``.
+* **Failing writer** — :func:`fail_next_write` makes the next raw npz
+  write raise (disk full, torn write); exercises the async writer's
+  capture-and-reraise contract (:class:`~repro.ckpt.CheckpointWriteError`
+  from the *next* ``save()``/``wait()``).
+
+Nothing here is imported by the hot path.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_tensor import SparseTensor
+
+
+class PreemptionError(BaseException):
+    """An injected preemption: the process dies *here*. Derives from
+    BaseException (like KeyboardInterrupt) so that ordinary ``except
+    Exception`` recovery code cannot accidentally swallow it — a real
+    SIGKILL wouldn't be catchable at all."""
+
+
+def poison_nonfinite(st: SparseTensor, rows: Sequence[int] = (0,),
+                     col: int = 0, value: float = float("nan")
+                     ) -> SparseTensor:
+    """A packed SparseTensor with ``value`` (NaN by default; pass
+    ``float("inf")`` for Inf poison) planted at ``features[rows, col]``.
+    Post-ingest by construction — the packed/count rows are untouched, so
+    the poison lands inside the valid prefix of whichever scene owns those
+    rows and flows into the loss and every gradient leaf."""
+    feats = st.features.at[jnp.asarray(list(rows)), col].set(value)
+    return SparseTensor(features=feats, packed=st.packed, count=st.count,
+                        layout=st.layout, validation=st.validation)
+
+
+def poison_scene_nonfinite(st: SparseTensor, scene: int,
+                           value: float = float("nan")) -> SparseTensor:
+    """Non-finite poison aimed at one *scene* of a batched tensor: the
+    first row of scene ``scene``'s segment. The quarantine target for
+    bisection tests — only this scene's rows are bad."""
+    starts, counts = st.scene_segments()
+    if counts[scene] == 0:
+        raise ValueError(f"scene {scene} is empty — nothing to poison")
+    return poison_nonfinite(st, rows=(int(starts[scene]),), value=value)
+
+
+def poison_labels(labels, rows: Sequence[int] = (0,),
+                  value: int = 10 ** 6) -> jnp.ndarray:
+    """Labels with a finite out-of-range class id planted at ``rows`` —
+    slips past every finiteness check (it *is* finite) and produces a
+    wrong-but-finite loss (``segmentation_loss`` clips it into range):
+    spike-detector territory, not NaN territory."""
+    lab = np.array(labels, copy=True)
+    lab[list(rows)] = value
+    return jnp.asarray(lab)
+
+
+# -- on-disk checkpoint faults ------------------------------------------------
+
+def corrupt_checkpoint(directory: str, step: int, *, mode: str = "flip",
+                       key: Optional[str] = None) -> str:
+    """Corrupt ``ckpt_{step:08d}.npz`` in place, manifest left intact.
+
+    * ``mode="flip"`` — *silent* corruption: one byte of one array (``key``,
+      default the first) is XORed and the npz rewritten, so the zip
+      container stays self-consistent and only the manifest's end-to-end
+      CRC32 can notice (naming the bad key). This is the fault class the
+      manifest checksums exist for — container-level checks can't see it.
+    * ``mode="truncate"`` — torn write: the file is cut in half; the npz
+      becomes unreadable at open (container-level failure).
+
+    Returns the path."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    if mode == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(os.path.getsize(path) // 2)
+    elif mode == "flip":
+        with np.load(path) as z:
+            data = {k: np.array(z[k]) for k in z.files}
+        k = key if key is not None else sorted(data)[0]
+        raw = bytearray(data[k].tobytes())
+        raw[len(raw) // 2] ^= 0xFF
+        data[k] = np.frombuffer(bytes(raw), data[k].dtype).reshape(
+            data[k].shape)
+        with open(path, "wb") as f:
+            np.savez(f, **data)
+    else:
+        raise ValueError(f"mode must be 'flip' or 'truncate', got {mode!r}")
+    return path
+
+
+def preempt_between_files(mgr, *, once: bool = True) -> None:
+    """Arm ``mgr`` so its next save is preempted *between* the ``.npz``
+    replace and the manifest replace (:class:`PreemptionError` from the
+    manager's ``_post_npz_hook`` seam), leaving the orphan-npz torn state.
+    With ``once`` (default) the hook disarms itself, so a retried save
+    completes. Use with ``async_save=False`` to see the raise directly;
+    with async saves it surfaces as a CheckpointWriteError on the next
+    ``save()``/``wait()`` (capture applies to BaseException too)."""
+    def hook(step: int) -> None:
+        if once:
+            mgr._post_npz_hook = None
+        raise PreemptionError(
+            f"injected preemption after ckpt_{step:08d}.npz, before its "
+            "manifest")
+    mgr._post_npz_hook = hook
+
+
+def fail_next_write(mgr, exc: Optional[BaseException] = None) -> None:
+    """Make ``mgr``'s next raw npz write raise (``OSError('injected disk
+    full')`` by default), then restore the real writer — the regression
+    harness for the async-save silent-failure fix (module doc)."""
+    real = mgr._write_npz
+
+    def failing(tmp, arrays):
+        mgr._write_npz = real
+        raise exc if exc is not None else OSError("injected disk full")
+
+    mgr._write_npz = failing

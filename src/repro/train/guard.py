@@ -1,0 +1,544 @@
+"""Self-healing training: the train-side degraded-mode contract.
+
+PR 6 gave serving a fault-isolation contract (``serve.engine`` module doc:
+every admitted request reaches a terminal outcome, poison is cornered by
+bisection, innocents are served bitwise-identically to a clean run). This
+module is the same contract for the training path, where the failure
+domain is worse: one non-finite batch does not cost one answer, it
+silently corrupts ``session.params`` for every step after it.
+
+Degraded-mode contract (GuardedPointCloudTrainer)
+-------------------------------------------------
+A batch fed to :meth:`GuardedPointCloudTrainer.step` always leaves the
+trainer in a state it can keep training from; no poisoned batch ever
+writes a non-finite value into params or optimizer state, and every
+defensive decision is recorded on a :class:`TrainHealthReport` and in
+:attr:`~GuardedPointCloudTrainer.counters`. The escalation ladder, in
+order:
+
+* **Guarded step (in-graph skip).** The jitted step computes ONE all-finite
+  flag over (loss, grad global-norm) — any NaN/Inf anywhere in the gradient
+  tree makes the global norm non-finite, so one scalar covers every leaf —
+  and applies the AdamW update through ``jnp.where(ok, new, old)``. A bad
+  step is a *functional no-op*: params and optimizer state (step counter
+  included) pass through **bitwise unchanged**, the same identity
+  discipline as the serving engine's escalation path. Detection costs one
+  ``isfinite`` on scalars already computed; nothing is re-run.
+* **Loss-spike skip (host-side).** Poison that stays finite (label
+  corruption, absurd-magnitude features) shows up as a loss far above the
+  recent trend. A median-of-ring-buffer detector
+  (:class:`LossSpikeDetector`) refuses to commit a step whose loss exceeds
+  ``spike_factor ×`` the median of the last ``spike_window`` committed
+  losses; because the update is functional, "not committing" is exact —
+  the returned params are simply dropped.
+* **Per-scene bisection.** A skipped *batched* step is retried on scene
+  sub-batches (the labeled batch splits exactly on its scene segments —
+  the same quarantine shape as ``PointCloudServeEngine._isolate``): halves
+  re-pack and re-attempt until the poison is cornered in a single scene,
+  which is quarantined while every healthy sub-batch trains. The
+  segment engine's alignment invariance makes a sub-batch update bitwise
+  identical to a clean run fed the same scenes (tests/test_train_guard.py).
+* **Rollback to last verified checkpoint.** After ``rollback_after``
+  consecutive steps with nothing committable, the trainer assumes its own
+  state — not the data — is bad and restores the checkpoint manager's
+  GC-exempt ``last_good`` tag (``ckpt.manager`` module doc), walking back
+  to the newest checkpoint that passes CRC32 verification
+  (``restore(fallback=True)``).
+* **Typed abort.** When rollback is impossible (no manager, nothing
+  verifies) or has been exhausted ``max_rollbacks`` times, the trainer
+  raises :class:`TrainAbortError` carrying the final report and counters —
+  the one failure mode that is *supposed* to page someone.
+
+Checkpoint cadence rides the same loop: every ``ckpt_every`` committed
+steps the trainer saves (async, write errors surface on the next save),
+and after ``last_good_after`` further consecutive healthy steps it
+advances the ``last_good`` tag to that save — a checkpoint taken just
+before trouble is never blessed as a rollback anchor.
+
+The fault harness for all of this is ``train.faults`` (NaN/Inf feature
+poison past the ingest boundary, label poison, on-disk checkpoint
+corruption, preemption between a checkpoint's npz and manifest), exercised
+in tests/test_train_guard.py, tests/test_ckpt_robust.py and the ci.sh
+``train-robustness`` stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.manager import CheckpointError, CheckpointManager
+from repro.core.packing import BitLayout
+from repro.core.sparse_tensor import SparseTensor
+from .optimizer import OptState, apply_updates, global_norm
+from .pointcloud import (PointCloudTrainConfig, PointCloudTrainer,
+                         labeled_tensor, make_segmentation_loss_fn)
+
+
+class TrainAbortError(RuntimeError):
+    """The guard's terminal escalation: training cannot proceed safely.
+    Carries the final :class:`TrainHealthReport` and the counters dict."""
+
+    def __init__(self, msg: str, *, report=None, counters=None):
+        super().__init__(msg)
+        self.report = report
+        self.counters = counters
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Static configuration of the guarded trainer's escalation ladder."""
+
+    # host-side loss-spike detector (module doc)
+    spike_window: int = 16        # ring buffer of committed losses
+    spike_factor: float = 10.0    # spike := loss > factor * median(ring)
+    spike_min_history: int = 5    # detector disarmed below this many entries
+    spike_floor: float = 1e-3     # median floor (a fully-converged run must
+                                  # not flag ordinary noise as a spike)
+    # escalation ladder
+    bisect: bool = True           # per-scene bisection of a bad batch
+    rollback_after: int = 3       # consecutive nothing-committed steps
+                                  # before rolling back to last_good
+    max_rollbacks: int = 2        # then TrainAbortError
+    # checkpoint cadence (needs a manager on the trainer)
+    ckpt_every: int = 0           # save every N committed steps (0 = off)
+    last_good_after: int = 2      # healthy steps after a save before the
+                                  # last_good tag advances to it
+
+
+class LossSpikeDetector:
+    """Median-of-ring-buffer spike detector over *committed* losses.
+
+    ``is_spike(loss)`` is True when the history is armed
+    (``>= min_history`` entries) and ``loss > factor * max(median,
+    floor)``. Only committed (healthy) losses enter the ring, so a run of
+    poisoned batches cannot drag the baseline up to meet itself."""
+
+    def __init__(self, window: int = 16, factor: float = 10.0,
+                 min_history: int = 5, floor: float = 1e-3):
+        self.window = window
+        self.factor = factor
+        self.min_history = min_history
+        self.floor = floor
+        self.ring: List[float] = []
+
+    def is_spike(self, loss: float) -> bool:
+        if len(self.ring) < self.min_history:
+            return False
+        med = float(np.median(self.ring))
+        return loss > self.factor * max(med, self.floor)
+
+    def record(self, loss: float) -> None:
+        self.ring.append(float(loss))
+        if len(self.ring) > self.window:
+            self.ring.pop(0)
+
+    def reset(self) -> None:
+        """Forget the baseline (after a rollback the params changed)."""
+        self.ring.clear()
+
+
+@dataclasses.dataclass
+class TrainHealthReport:
+    """Per-:meth:`~GuardedPointCloudTrainer.step` degradation accounting —
+    the train-side sibling of ``serve.session.HealthReport``.
+
+    ``committed`` lists one entry per optimizer update actually applied
+    this call, in commit order: ``None`` means the full batch as given;
+    a list of scene indices means a bisection sub-batch. Replaying exactly
+    these groups through a clean trainer reproduces the guarded run's
+    params bitwise (tests/test_train_guard.py)."""
+
+    step: int                     # optimizer step count at entry
+    action: str = "ok"            # "ok" | "skipped" | "bisected" |
+                                  # "rolled_back"
+    loss: float = float("nan")    # full-batch loss as computed
+    grad_norm: float = float("nan")
+    nonfinite: bool = False       # in-graph all-finite flag tripped
+    spike: bool = False           # host-side spike detector tripped
+    committed: List[Optional[List[int]]] = dataclasses.field(
+        default_factory=list)
+    quarantined: List[int] = dataclasses.field(default_factory=list)
+    rollback_to: Optional[int] = None   # checkpoint step restored, if any
+
+    @property
+    def ok(self) -> bool:
+        """The batch trained exactly as submitted (no degradation)."""
+        return self.action == "ok"
+
+    def summary(self) -> str:
+        parts = [f"step={self.step} action={self.action} "
+                 f"loss={self.loss:.4g}"]
+        if self.nonfinite:
+            parts.append("nonfinite")
+        if self.spike:
+            parts.append("spike")
+        if self.committed:
+            groups = ["all" if g is None else str(g) for g in self.committed]
+            parts.append(f"committed={','.join(groups)}")
+        if self.quarantined:
+            parts.append(f"quarantined={self.quarantined}")
+        if self.rollback_to is not None:
+            parts.append(f"rollback_to={self.rollback_to}")
+        return " ".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# the guarded update + step (in-graph layer of the ladder)
+# ---------------------------------------------------------------------------
+
+def guarded_apply_updates(params, grads, opt_state: OptState, cfg, *,
+                          loss=None):
+    """AdamW update gated by one in-graph all-finite flag.
+
+    ``ok = isfinite(global_norm(grads))`` — the global norm is a sum of
+    squares over every gradient leaf, so a single NaN/Inf anywhere makes it
+    non-finite — ``& isfinite(loss)`` when a loss is given. The update is
+    applied through ``jnp.where(ok, new, old)`` per leaf (params AND
+    optimizer state, step counter included), so a bad step returns its
+    inputs **bitwise unchanged** — a functional no-op, differentiation-free
+    and branch-free (both sides are computed; the poisoned side is
+    discarded by the select, never propagated).
+
+    Returns ``(params, opt_state, metrics)`` with ``metrics["step_ok"]``
+    the flag. Exported standalone so the property suite can drive it with
+    arbitrary NaN/Inf positions injected directly into ``grads``
+    (tests/test_property.py)."""
+    gnorm = global_norm(grads)
+    ok = jnp.isfinite(gnorm)
+    if loss is not None:
+        ok = jnp.logical_and(ok, jnp.isfinite(loss))
+    new_p, new_o, metrics = apply_updates(params, grads, opt_state, cfg)
+    keep = lambda new, old: jnp.where(ok, new, old)
+    guard_p = jax.tree.map(keep, new_p, params)
+    guard_o = jax.tree.map(keep, new_o, opt_state)
+    metrics["step_ok"] = ok
+    return guard_p, guard_o, metrics
+
+
+def make_guarded_train_step(
+    net,
+    layout: BitLayout,
+    tcfg: PointCloudTrainConfig,
+    *,
+    engine: str = "zdelta",
+    downsample_method: str = "auto",
+    segment=None,
+) -> Callable:
+    """The fused plan→forward→loss→grad→(guarded)update step: identical to
+    ``make_pointcloud_train_step`` except the update goes through
+    :func:`guarded_apply_updates`, so a non-finite loss or gradient leaves
+    params and optimizer state bitwise untouched (module doc). Same
+    signature, one extra metric (``step_ok``)."""
+    loss_fn = make_segmentation_loss_fn(
+        net, layout, engine=engine, downsample_method=downsample_method,
+        segment=segment)
+
+    def step(params, opt_state: OptState, packed, feats, labels):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, packed, feats, labels)
+        params, opt_state, metrics = guarded_apply_updates(
+            params, grads, opt_state, tcfg.opt, loss=loss)
+        metrics.update(loss=loss, accuracy=acc)
+        return params, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# the guarded trainer (host layers of the ladder)
+# ---------------------------------------------------------------------------
+
+class GuardedPointCloudTrainer(PointCloudTrainer):
+    """A :class:`~repro.train.pointcloud.PointCloudTrainer` wrapped in the
+    degraded-mode contract (module doc) — built by
+    ``session.compile_train(guard=...)``.
+
+    Same :meth:`step` surface as the plain trainer (metrics dict, now with
+    ``step_ok``); every call additionally leaves a
+    :class:`TrainHealthReport` on :attr:`last_report` and updates the
+    :attr:`counters` dict. ``ckpt`` (a ``CheckpointManager`` or a
+    directory) enables auto-checkpointing, the ``last_good`` rollback
+    anchor and :meth:`resume`."""
+
+    def __init__(self, session, tcfg: Optional[PointCloudTrainConfig] = None,
+                 *, guard: Optional[GuardConfig] = None,
+                 ckpt=None, opt_state=None, resume: bool = False):
+        super().__init__(session, tcfg, opt_state=opt_state)
+        self.guard = guard if guard is not None else GuardConfig()
+        self._step = jax.jit(make_guarded_train_step(
+            session.net, session.layout, self.tcfg, engine=session.engine,
+            downsample_method=session.downsample_method,
+            segment=getattr(session, "segment", None)))
+        self.ckpt: Optional[CheckpointManager] = (
+            CheckpointManager(ckpt) if isinstance(ckpt, str) else ckpt)
+        self._spikes = LossSpikeDetector(
+            window=self.guard.spike_window, factor=self.guard.spike_factor,
+            min_history=self.guard.spike_min_history,
+            floor=self.guard.spike_floor)
+        self.last_report: Optional[TrainHealthReport] = None
+        self._consec_bad = 0          # steps in a row with nothing committed
+        self._healthy_streak = 0      # consecutive steps without any fault
+        # saves awaiting blessing: (step, healthy_streak at save time) —
+        # blessed when the streak reaches that value + last_good_after;
+        # any bad step cancels the whole list (module doc)
+        self._pending: List[Tuple[int, int]] = []
+        self._last_saved = 0
+        # degraded-mode counters (module doc) — the observability surface
+        self.steps_total = 0
+        self.steps_ok = 0
+        self.steps_skipped = 0
+        self.nonfinite_steps = 0
+        self.spikes = 0
+        self.bisections = 0
+        self.sub_steps_committed = 0
+        self.scenes_quarantined = 0
+        self.rollbacks = 0
+        self.checkpoint_saves = 0
+        if resume:
+            self.resume()
+
+    @property
+    def counters(self) -> dict:
+        """The degraded-mode counters as one dict (for metrics export),
+        plus the checkpoint manager's verification failures and the
+        current ``last_good`` anchor (-1 when absent)."""
+        out = {k: getattr(self, k) for k in (
+            "steps_total", "steps_ok", "steps_skipped", "nonfinite_steps",
+            "spikes", "bisections", "sub_steps_committed",
+            "scenes_quarantined", "rollbacks", "checkpoint_saves")}
+        out["checksum_failures"] = (self.ckpt.verify_failures
+                                    if self.ckpt is not None else 0)
+        lg = (self.ckpt.last_good_step() if self.ckpt is not None else None)
+        out["last_good_step"] = -1 if lg is None else lg
+        return out
+
+    # -- ladder rung 1+2: guarded attempt (in-graph flag + spike) ---------
+
+    def _attempt(self, st: SparseTensor, labels) -> Tuple[dict, str]:
+        """One guarded update attempt. Commits (params, opt state, spike
+        ring) only when healthy; returns (metrics, status) with status in
+        {"ok", "nonfinite", "spike"}. Never mutates state on a bad step —
+        the functional update makes "skip" exact."""
+        stp, labp = self._prepare(st, labels)
+        new_p, new_o, metrics = self._step(
+            self.session.params, self.opt_state, stp.packed, stp.features,
+            labp)
+        m = {k: float(v) for k, v in metrics.items()}
+        if m["step_ok"] < 0.5:
+            return m, "nonfinite"
+        if self._spikes.is_spike(m["loss"]):
+            return m, "spike"
+        self.session.params = new_p
+        self.opt_state = new_o
+        self._spikes.record(m["loss"])
+        return m, "ok"
+
+    # -- ladder rung 3: per-scene bisection -------------------------------
+
+    def _scene_clouds(self, st: SparseTensor, labels) -> List[tuple]:
+        """Split a labeled batch into per-scene ``(scene_index, coords,
+        feats, labels)`` on its scene segments (host-side; empty scene
+        slots dropped). The labeled batch's rows are batch-major sorted,
+        so labels slice on the same segments as the tensor."""
+        starts, counts = st.scene_segments()
+        lab = np.asarray(labels)
+        out = []
+        for i, scene in enumerate(st.unbatch()):
+            n = int(scene.count)
+            if n == 0:
+                continue
+            coords, _ = scene.coords()
+            out.append((i, coords, np.asarray(scene.features)[:n],
+                        lab[starts[i]: starts[i] + n]))
+        return out
+
+    def _bisect(self, scenes: List[tuple], report: TrainHealthReport) -> int:
+        """Bisection quarantine over scenes — the engine's ``_isolate``
+        shape: a bad sub-batch splits in halves until the poison stands
+        alone (quarantined); every healthy sub-batch commits one update.
+        Re-packing uses ``validate="none"``: the rows already passed the
+        ingest boundary once, and the faults this rung exists for are
+        exactly the ones validation cannot see."""
+        committed = 0
+
+        def serve(sub: List[tuple]) -> None:
+            nonlocal committed
+            if not sub:
+                return
+            sst, slab = labeled_tensor(
+                [(c, f, l) for _, c, f, l in sub], self.session.layout,
+                ignore_label=self.tcfg.ignore_label, validate="none")
+            _, status = self._attempt(sst, slab)
+            if status == "ok":
+                committed += 1
+                self.sub_steps_committed += 1
+                report.committed.append([i for i, _, _, _ in sub])
+                return
+            if len(sub) == 1:
+                report.quarantined.append(sub[0][0])
+                self.scenes_quarantined += 1
+                return
+            mid = len(sub) // 2
+            serve(sub[:mid])
+            serve(sub[mid:])
+
+        serve(scenes)
+        return committed
+
+    # -- ladder rung 4+5: rollback / abort ---------------------------------
+
+    def _escalate(self, report: TrainHealthReport) -> None:
+        """``rollback_after`` consecutive dead steps: restore the newest
+        verifying checkpoint at or before the ``last_good`` tag; abort
+        (typed) when that is impossible or exhausted."""
+        if self.ckpt is None:
+            raise TrainAbortError(
+                f"{self._consec_bad} consecutive unusable batches and no "
+                "checkpoint manager to roll back to — attach one via "
+                "session.compile_train(guard=..., ckpt=dir)",
+                report=report, counters=self.counters)
+        if self.rollbacks >= self.guard.max_rollbacks:
+            raise TrainAbortError(
+                f"still failing after {self.rollbacks} rollbacks "
+                f"(max_rollbacks={self.guard.max_rollbacks}) — the fault is "
+                "not in the optimizer state; inspect the data pipeline",
+                report=report, counters=self.counters)
+        try:
+            p, o, s = self.ckpt.restore(
+                self.ckpt.last_good_step(), self.session.params,
+                self.opt_state, fallback=True)
+        except CheckpointError as e:
+            raise TrainAbortError(
+                f"rollback failed: {e}", report=report,
+                counters=self.counters) from e
+        self.session.params = p
+        self.opt_state = o
+        self.rollbacks += 1
+        self._consec_bad = 0
+        self._last_saved = s       # the cadence restarts from the anchor
+        self._spikes.reset()       # the baseline belongs to the old params
+        report.action = "rolled_back"
+        report.rollback_to = s
+
+    # -- checkpoint cadence + the last_good tag ----------------------------
+
+    def _after_healthy(self) -> None:
+        """Auto-checkpoint cadence and last_good advancement (module doc).
+        Called once per fault-free step: bump the healthy streak, bless the
+        newest pending save that has been followed by ``last_good_after``
+        healthy steps, then save on the cadence."""
+        if self.ckpt is None:
+            return
+        self._healthy_streak += 1
+        ripe = [(s, at) for s, at in self._pending
+                if self._healthy_streak >= at + self.guard.last_good_after]
+        if ripe:
+            newest = max(s for s, _ in ripe)
+            self.ckpt.mark_last_good(newest)
+            self._pending = [(s, at) for s, at in self._pending
+                             if s > newest]
+        step = int(self.opt_state.step)
+        if (self.guard.ckpt_every
+                and step - self._last_saved >= self.guard.ckpt_every):
+            self.ckpt.save(step, self.session.params, self.opt_state)
+            self.checkpoint_saves += 1
+            self._last_saved = step
+            self._pending.append((step, self._healthy_streak))
+
+    def _after_faulty(self) -> None:
+        """Any detected fault: reset the healthy streak and cancel pending
+        blessings — a checkpoint taken just before trouble is never blessed
+        as the rollback anchor (module doc)."""
+        self._healthy_streak = 0
+        self._pending.clear()
+
+    def save(self, *, mark_good: bool = False) -> int:
+        """Checkpoint now (outside the cadence). ``mark_good=True`` also
+        advances the ``last_good`` tag immediately — for a caller that has
+        independent evidence the state is healthy (e.g. an eval pass)."""
+        if self.ckpt is None:
+            raise ValueError("no CheckpointManager attached — "
+                             "compile_train(guard=..., ckpt=dir)")
+        step = int(self.opt_state.step)
+        self.ckpt.save(step, self.session.params, self.opt_state)
+        self.checkpoint_saves += 1
+        self._last_saved = step
+        if mark_good:
+            self.ckpt.mark_last_good(step)
+            self._pending = [(s, at) for s, at in self._pending if s > step]
+        else:
+            self._pending.append((step, self._healthy_streak))
+        return step
+
+    def resume(self) -> Optional[int]:
+        """Crash-safe resume: restore the newest checkpoint that verifies
+        (``restore(fallback=True)`` — corrupt or torn checkpoints are
+        walked past, counted in ``counters["checksum_failures"]``).
+        Returns the restored step, or None when the directory is empty."""
+        if self.ckpt is None or not self.ckpt.steps():
+            return None
+        p, o, s = self.ckpt.restore(None, self.session.params,
+                                    self.opt_state, fallback=True)
+        self.session.params = p
+        self.opt_state = o
+        self._last_saved = s
+        return s
+
+    # -- the guarded step ---------------------------------------------------
+
+    def step(self, st: SparseTensor, labels) -> dict:
+        """One guarded optimization step (module doc). Returns the plain
+        trainer's metrics dict plus ``step_ok``; the defensive story of the
+        call lands on :attr:`last_report`."""
+        self.steps_total += 1
+        report = TrainHealthReport(step=int(self.opt_state.step))
+        m, status = self._attempt(st, labels)
+        report.loss = m["loss"]
+        report.grad_norm = m["grad_norm"]
+        if status == "ok":
+            self.steps_ok += 1
+            report.committed.append(None)      # the full batch, as given
+            self._consec_bad = 0
+            self._after_healthy()
+            self.last_report = report
+            return m
+        # full batch refused: skip is already exact (nothing was committed)
+        self.steps_skipped += 1
+        report.nonfinite = status == "nonfinite"
+        report.spike = status == "spike"
+        if report.nonfinite:
+            self.nonfinite_steps += 1
+        else:
+            self.spikes += 1
+        report.action = "skipped"
+        committed = 0
+        scenes = (self._scene_clouds(st, labels)
+                  if self.guard.bisect else [])
+        if len(scenes) > 1:
+            self.bisections += 1
+            report.action = "bisected"
+            committed = self._bisect(scenes, report)
+        elif len(scenes) == 1:
+            # single-scene batch: nothing to bisect — the scene IS the fault
+            report.quarantined.append(scenes[0][0])
+            self.scenes_quarantined += 1
+        self._after_faulty()    # never bless a save followed by a fault
+        if committed:
+            self._consec_bad = 0
+        else:
+            self._consec_bad += 1
+            if self._consec_bad >= self.guard.rollback_after:
+                self._escalate(report)
+        self.last_report = report
+        return m
+
+    def __repr__(self):
+        return (f"GuardedPointCloudTrainer({self.session.net.name}, "
+                f"step={int(self.opt_state.step)}, "
+                f"ok={self.steps_ok}/{self.steps_total}, "
+                f"quarantined={self.scenes_quarantined}, "
+                f"rollbacks={self.rollbacks})")

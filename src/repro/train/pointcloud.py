@@ -106,7 +106,8 @@ def scene_features(scene: Scene, channels: int = 4) -> np.ndarray:
 def labeled_tensor(clouds: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
                    layout: BitLayout, *,
                    capacity: Optional[int] = None,
-                   ignore_label: int = -1
+                   ignore_label: int = -1,
+                   validate: str = "reject"
                    ) -> Tuple[SparseTensor, jax.Array]:
     """Pack B labeled scenes — ``[(coords, features, labels), ...]`` — into
     one batched SparseTensor plus a row-aligned label vector.
@@ -129,7 +130,8 @@ def labeled_tensor(clouds: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
         aug.append((coords, np.concatenate(
             [np.asarray(feats, np.float32),
              np.asarray(labels, np.float32)[:, None]], axis=1)))
-    st = SparseTensor.from_point_clouds(aug, layout, capacity=capacity)
+    st = SparseTensor.from_point_clouds(aug, layout, capacity=capacity,
+                                        validate=validate)
     n = int(st.count)
     lab = np.rint(np.asarray(st.features[:, -1])).astype(np.int32)
     lab[n:] = ignore_label
@@ -140,7 +142,9 @@ def labeled_tensor(clouds: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
 
 def labeled_batch(batch: Sequence[Scene], layout: BitLayout, *,
                   channels: int = 4, capacity: Optional[int] = None,
-                  ignore_label: int = -1) -> Tuple[SparseTensor, jax.Array]:
+                  ignore_label: int = -1,
+                  validate: str = "reject"
+                  ) -> Tuple[SparseTensor, jax.Array]:
     """``scene_batch(labels=True)`` output → (SparseTensor, labels), with
     :func:`scene_features` as inputs. Convenience composition of
     :func:`scene_features` + :func:`labeled_tensor`."""
@@ -151,7 +155,7 @@ def labeled_batch(batch: Sequence[Scene], layout: BitLayout, *,
     return labeled_tensor(
         [(sc.coords, scene_features(sc, channels), sc.labels)
          for sc in batch], layout, capacity=capacity,
-        ignore_label=ignore_label)
+        ignore_label=ignore_label, validate=validate)
 
 
 # ---------------------------------------------------------------------------
@@ -176,9 +180,19 @@ def segmentation_loss(logits: jax.Array, labels: jax.Array, *,
     invariant under capacity re-bucketing and scene alignment, with no
     capacity-wide pass depending on S. ``seg=None`` keeps the legacy
     single-scene ``jnp.sum`` path (masking there is label-driven and need
-    not be contiguous)."""
+    not be contiguous).
+
+    Degenerate inputs are non-events by construction (the training guard —
+    ``train.guard`` — must never have to catch this loss): a batch with
+    **zero supervised voxels** (every label ``ignore_label``) has Σw = 0,
+    and the ``jnp.maximum(Σw, 1)`` denominator makes loss and accuracy an
+    exact 0.0 with all-zero (finite) logit gradients, never 0/0 = NaN —
+    on both the ``seg`` and legacy paths. Out-of-range labels (e.g. label
+    poison ≥ n_classes) are clipped into the class range, so they produce
+    a *wrong, finite* loss — the spike detector's job (``train.guard``),
+    not a NaN source."""
     valid = labels >= 0
-    lab = jnp.clip(labels, 0)
+    lab = jnp.clip(labels, 0, logits.shape[-1] - 1)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     ce = -jnp.take_along_axis(logp, lab[:, None], axis=-1)[:, 0]
     w = valid.astype(jnp.float32)
@@ -214,6 +228,43 @@ def scene_pool(st: SparseTensor, *, mode: str = "mean",
     return s.astype(st.features.dtype)
 
 
+def make_segmentation_loss_fn(
+    net: PointCloudNet,
+    layout: BitLayout,
+    *,
+    engine: str = "zdelta",
+    downsample_method: str = "auto",
+    segment: Optional[SegmentSpec] = None,
+) -> Callable:
+    """The fused plan→forward→loss graph as a pure function
+    ``loss_fn(params, packed, feats, labels) -> (loss, accuracy)`` — the
+    differentiable core shared by :func:`make_pointcloud_train_step` and
+    the guarded step (``train.guard``). Validates that the net ends on its
+    input level (per-voxel supervision)."""
+    specs = net.conv_specs()
+    in_level = specs[0].m_in if specs else 0
+    out_level = specs[-1].m_out if specs else 0
+    if out_level != in_level:
+        raise ValueError(
+            f"{net.name} ends at level {out_level} but its input is level "
+            f"{in_level}: per-voxel labels can't supervise coarser logits. "
+            "Train a submanifold-ending segmentation net (tiny_segnet, "
+            "minkunet42) or pool the labels to the output level yourself.")
+
+    def loss_fn(params, packed, feats, labels):
+        plan = build_network_plan(packed, specs=specs, layout=layout,
+                                  engine=engine,
+                                  downsample_method=downsample_method)
+        logits = pointcloud_forward(params, net, plan, feats, layout=layout,
+                                    segment=segment)
+        out_cs = plan.coords[out_level]
+        seg = (packed_segments(out_cs.packed, out_cs.count, layout)
+               if layout.bb else None)
+        return segmentation_loss(logits, labels, seg=seg, segment=segment)
+
+    return loss_fn
+
+
 def make_pointcloud_train_step(
     net: PointCloudNet,
     layout: BitLayout,
@@ -235,30 +286,13 @@ def make_pointcloud_train_step(
     on the segmented-reduction engine (``segment`` spec — the session's,
     when built via ``compile_train``), so no stage of the step performs an
     S-dependent number of capacity-wide passes in either direction."""
-    specs = net.conv_specs()
-    in_level = specs[0].m_in if specs else 0
-    out_level = specs[-1].m_out if specs else 0
-    if out_level != in_level:
-        raise ValueError(
-            f"{net.name} ends at level {out_level} but its input is level "
-            f"{in_level}: per-voxel labels can't supervise coarser logits. "
-            "Train a submanifold-ending segmentation net (tiny_segnet, "
-            "minkunet42) or pool the labels to the output level yourself.")
+    loss_fn = make_segmentation_loss_fn(
+        net, layout, engine=engine, downsample_method=downsample_method,
+        segment=segment)
 
     def step(params, opt_state: OptState, packed, feats, labels):
-        def loss_fn(p):
-            plan = build_network_plan(packed, specs=specs, layout=layout,
-                                      engine=engine,
-                                      downsample_method=downsample_method)
-            logits = pointcloud_forward(p, net, plan, feats, layout=layout,
-                                        segment=segment)
-            out_cs = plan.coords[out_level]
-            seg = (packed_segments(out_cs.packed, out_cs.count, layout)
-                   if layout.bb else None)
-            return segmentation_loss(logits, labels, seg=seg,
-                                     segment=segment)
-
-        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, packed, feats, labels)
         params, opt_state, metrics = apply_updates(params, grads, opt_state,
                                                    tcfg.opt)
         metrics.update(loss=loss, accuracy=acc)
@@ -294,9 +328,11 @@ class PointCloudTrainer:
             downsample_method=session.downsample_method,
             segment=getattr(session, "segment", None)))
 
-    def step(self, st: SparseTensor, labels) -> dict:
-        """One optimization step on a (batched) labeled SparseTensor.
-        Returns float metrics; updates ``session.params`` / ``opt_state``."""
+    def _prepare(self, st: SparseTensor, labels
+                 ) -> Tuple[SparseTensor, jax.Array]:
+        """Validate + bucket one labeled batch: pad the tensor to the
+        session's pow2 capacity bucket and the labels with the ignore
+        label. Shared with the guarded trainer (``train.guard``)."""
         ensure_sparse_tensor(st, where="PointCloudTrainer.step")
         if st.layout != self.session.layout:
             raise ValueError(
@@ -316,6 +352,12 @@ class PointCloudTrainer:
             labels = jnp.concatenate([
                 labels, jnp.full((cap - labels.shape[0],),
                                  self.tcfg.ignore_label, labels.dtype)])
+        return stp, labels
+
+    def step(self, st: SparseTensor, labels) -> dict:
+        """One optimization step on a (batched) labeled SparseTensor.
+        Returns float metrics; updates ``session.params`` / ``opt_state``."""
+        stp, labels = self._prepare(st, labels)
         params, self.opt_state, metrics = self._step(
             self.session.params, self.opt_state, stp.packed, stp.features,
             labels)

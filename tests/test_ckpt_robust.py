@@ -1,0 +1,228 @@
+"""ckpt.manager integrity contract: CRC32 verify-on-restore, fallback walk,
+orphan handling, last_good GC exemption, async-writer error capture."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointCorruptionError, CheckpointManager,
+                        CheckpointNotFoundError, CheckpointWriteError)
+from repro.train.faults import (PreemptionError, corrupt_checkpoint,
+                                fail_next_write, preempt_between_files)
+
+
+def _params(seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)
+                             * scale),
+            "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+
+
+def _tree_equal(a, b):
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _mgr(tmp_path, **kw):
+    kw.setdefault("async_save", False)
+    return CheckpointManager(str(tmp_path / "ck"), **kw)
+
+
+# -- verify-on-restore --------------------------------------------------------
+
+def test_restore_verifies_checksums_and_roundtrips(tmp_path):
+    mgr = _mgr(tmp_path)
+    p = _params(1)
+    mgr.save(3, p)
+    r, _, step = mgr.restore(None, p)
+    assert step == 3 and _tree_equal(r, p)
+    # the manifest carries format 2 + a checksum per array
+    with open(os.path.join(mgr.dir, "ckpt_00000003.json")) as f:
+        meta = json.load(f)
+    assert meta["format"] == 2
+    assert set(meta["checksums"]) == {"params::w", "params::b"}
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate"])
+def test_corruption_detected_with_file_named(tmp_path, mode):
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _params(1))
+    corrupt_checkpoint(mgr.dir, 1, mode=mode)
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        mgr.restore(None, _params(1))
+    assert "ckpt_00000001.npz" in str(ei.value)
+    if mode == "flip":     # file still opens; the CRC names the bad array
+        assert ei.value.key is not None
+    assert mgr.verify_failures == 1
+
+
+def test_fallback_walks_to_newest_verifying(tmp_path):
+    mgr = _mgr(tmp_path, keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, _params(s))
+    corrupt_checkpoint(mgr.dir, 3, mode="flip")
+    # without fallback: the newest is corrupt, restore refuses
+    with pytest.raises(CheckpointCorruptionError):
+        mgr.restore(None, _params(0))
+    # with fallback: walk back to step 2, counting the failure
+    r, _, step = mgr.restore(None, _params(0), fallback=True)
+    assert step == 2 and _tree_equal(r, _params(2))
+    assert mgr.verify_failures == 2   # one per restore attempt on step 3
+
+
+def test_fallback_all_corrupt_aggregates(tmp_path):
+    mgr = _mgr(tmp_path, keep=5)
+    for s in (1, 2):
+        mgr.save(s, _params(s))
+        corrupt_checkpoint(mgr.dir, s, mode="flip")
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        mgr.restore(None, _params(0), fallback=True)
+    assert "all 2 candidate checkpoints failed" in str(ei.value)
+
+
+def test_verify_false_skips_checksums(tmp_path):
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _params(1))
+    corrupt_checkpoint(mgr.dir, 1, mode="flip")   # npz still readable
+    r, _, step = mgr.restore(None, _params(1), verify=False)
+    assert step == 1   # trusted blindly — caller opted out
+
+
+def test_format1_manifest_restores_without_verification(tmp_path):
+    # back-compat: a pre-checksum manifest (no "checksums" key) must load
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _params(1))
+    mpath = os.path.join(mgr.dir, "ckpt_00000001.json")
+    with open(mpath, "w") as f:
+        json.dump({"step": 1}, f)
+    r, _, step = mgr.restore(None, _params(1))
+    assert step == 1 and _tree_equal(r, _params(1))
+
+
+# -- typed errors replace assert/KeyError ------------------------------------
+
+def test_missing_step_raises_not_found(tmp_path):
+    mgr = _mgr(tmp_path)
+    with pytest.raises(CheckpointNotFoundError):
+        mgr.restore(None, _params(0))
+    mgr.save(1, _params(1))
+    with pytest.raises(CheckpointNotFoundError):
+        mgr.restore(7, _params(0))
+
+
+def test_template_mismatch_is_typed_and_names_key(tmp_path):
+    mgr = _mgr(tmp_path)
+    mgr.save(1, {"w": jnp.ones((2,))})
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        mgr.restore(None, {"w": jnp.ones((2,)), "extra": jnp.ones((3,))})
+    assert ei.value.key == "params::extra"
+
+
+# -- preemption between npz and manifest (the torn state) --------------------
+
+def test_preempted_save_leaves_rejectable_orphan(tmp_path):
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _params(1))
+    preempt_between_files(mgr)
+    with pytest.raises(PreemptionError):
+        mgr.save(2, _params(2))
+    # step 2's npz landed, its manifest did not: incomplete, unverifiable
+    assert mgr.steps() == [1, 2]
+    assert mgr.complete_steps() == [1]
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        mgr.restore(2, _params(0))
+    assert "manifest missing" in str(ei.value)
+    # verify=False tolerates it (trusts the filename)
+    _, _, step = mgr.restore(2, _params(0), verify=False)
+    assert step == 2
+    # fallback resumes from the last complete checkpoint
+    r, _, step = mgr.restore(None, _params(0), fallback=True)
+    assert step == 1 and _tree_equal(r, _params(1))
+
+
+def test_gc_cleans_both_orphan_kinds(tmp_path):
+    mgr = _mgr(tmp_path, keep=3)
+    preempt_between_files(mgr)
+    with pytest.raises(PreemptionError):
+        mgr.save(1, _params(1))
+    assert mgr.steps() == [1] and mgr.complete_steps() == []
+    # an orphan manifest too (crash after npz deletion, or stray file)
+    with open(os.path.join(mgr.dir, "ckpt_00000099.json"), "w") as f:
+        json.dump({"step": 99}, f)
+    # next successful save's _gc removes the orphan manifest and the stale
+    # orphan npz (no longer the newest write in flight)
+    mgr.save(2, _params(2))
+    assert mgr.complete_steps() == [2]
+    assert mgr.steps() == [2]
+    assert not os.path.exists(os.path.join(mgr.dir, "ckpt_00000099.json"))
+
+
+def test_gc_spares_newest_npz_in_flight(tmp_path):
+    # the newest npz may be a write whose manifest is still landing — _gc
+    # must never delete it out from under the writer
+    mgr = _mgr(tmp_path, keep=2)
+    preempt_between_files(mgr)
+    with pytest.raises(PreemptionError):
+        mgr.save(5, _params(5))
+    mgr._gc()
+    assert mgr.steps() == [5]
+
+
+# -- last_good tag ------------------------------------------------------------
+
+def test_last_good_exempt_from_gc(tmp_path):
+    mgr = _mgr(tmp_path, keep=2)
+    mgr.save(1, _params(1))
+    mgr.mark_last_good(1)
+    for s in (2, 3, 4, 5):
+        mgr.save(s, _params(s))
+    # keep=2 would evict step 1, but the tag pins it
+    assert mgr.complete_steps() == [1, 4, 5]
+    assert mgr.last_good_step() == 1
+    r, _, step = mgr.restore(1, _params(0))
+    assert _tree_equal(r, _params(1))
+
+
+def test_mark_last_good_requires_complete_checkpoint(tmp_path):
+    mgr = _mgr(tmp_path)
+    with pytest.raises(CheckpointNotFoundError):
+        mgr.mark_last_good(3)
+    assert mgr.last_good_step() is None
+
+
+# -- async writer error capture (the silent-failure fix) ---------------------
+
+def test_async_write_failure_reraised_on_next_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=True)
+    fail_next_write(mgr)
+    mgr.save(1, _params(1))               # async: failure lands off-thread
+    with pytest.raises(CheckpointWriteError) as ei:
+        mgr.save(2, _params(2))
+    assert "injected disk full" in str(ei.value)
+    # the injected writer restored itself; the retried save succeeds
+    mgr.save(2, _params(2))
+    mgr.wait()
+    assert mgr.complete_steps() == [2]
+
+
+def test_async_write_failure_reraised_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=True)
+    fail_next_write(mgr, RuntimeError("torn write"))
+    mgr.save(1, _params(1))
+    with pytest.raises(CheckpointWriteError) as ei:
+        mgr.wait()
+    assert "torn write" in str(ei.value)
+    # the error is consumed once, not raised forever
+    mgr.wait()
+
+
+def test_sync_write_failure_raises_immediately(tmp_path):
+    mgr = _mgr(tmp_path)
+    fail_next_write(mgr)
+    with pytest.raises(OSError):
+        mgr.save(1, _params(1))
+    mgr.save(1, _params(1))
+    assert mgr.complete_steps() == [1]

@@ -212,3 +212,57 @@ def test_sorted_query_positions_monotone(x0, span):
                                dtype=np.int32))
     pos = np.asarray(jnp.searchsorted(arr, qs))
     assert (np.diff(pos) >= 0).all()
+
+
+_POISON = [float("nan"), float("inf"), float("-inf")]
+
+
+@SET
+@given(st.data())
+def test_guarded_update_never_writes_nonfinite(data):
+    """The guarded train step's update (train.guard.guarded_apply_updates)
+    under ARBITRARY NaN/Inf injection positions in the gradient tree (and
+    optionally the loss): the step is refused (step_ok=0) and params AND
+    optimizer state pass through bitwise identical — no non-finite value
+    can ever reach the weights. With no injection the step applies and the
+    new params are all finite. Deterministically mirrored in
+    tests/test_train_guard.py (test_guarded_apply_updates_*)."""
+    from repro.train import AdamWConfig, init_opt_state
+    from repro.train.guard import guarded_apply_updates
+
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    shapes = {"a": (4, 3), "b": (6,), "c": (2, 2, 2)}
+    params = {k: jnp.asarray(rng.normal(size=s).astype(np.float32))
+              for k, s in shapes.items()}
+    grads = {k: jnp.asarray(rng.normal(size=s).astype(np.float32) * 1e-2)
+             for k, s in shapes.items()}
+    cfg = AdamWConfig(warmup_steps=1, total_steps=10)
+    opt = init_opt_state(params, cfg)
+
+    # inject poison at 0..4 arbitrary (leaf, flat-index) positions, plus
+    # optionally into the loss scalar
+    n_inject = data.draw(st.integers(0, 4))
+    for _ in range(n_inject):
+        k = data.draw(st.sampled_from(sorted(shapes)))
+        flat = np.array(grads[k]).reshape(-1)
+        flat[data.draw(st.integers(0, flat.size - 1))] = \
+            data.draw(st.sampled_from(_POISON))
+        grads[k] = jnp.asarray(flat.reshape(shapes[k]))
+    poison_loss = data.draw(st.booleans())
+    loss = jnp.asarray(data.draw(st.sampled_from(_POISON))
+                       if poison_loss else 1.25)
+
+    before_p = [np.asarray(x).tobytes() for x in jax.tree.leaves(params)]
+    before_o = [np.asarray(x).tobytes() for x in jax.tree.leaves(opt)]
+    new_p, new_o, m = guarded_apply_updates(params, grads, opt, cfg,
+                                            loss=loss)
+    bad = n_inject > 0 or poison_loss
+    assert float(m["step_ok"]) == (0.0 if bad else 1.0)
+    after_p = [np.asarray(x).tobytes() for x in jax.tree.leaves(new_p)]
+    after_o = [np.asarray(x).tobytes() for x in jax.tree.leaves(new_o)]
+    if bad:
+        assert after_p == before_p and after_o == before_o
+    else:
+        assert int(new_o.step) == 1
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(new_p))

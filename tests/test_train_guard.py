@@ -1,0 +1,378 @@
+"""Self-healing training (train.guard): the escalation ladder end to end —
+in-graph non-finite skip (bitwise no-op), loss-spike skip, per-scene
+bisection quarantine, last_good rollback, typed abort — plus the ISSUE's
+acceptance equivalence: a poisoned guarded run's final params are bitwise
+identical to a clean run on the healthy work alone."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.data import scenes
+from repro.models import pointcloud as pc
+from repro.serve import compile_network
+from repro.train import (AdamWConfig, GuardConfig, GuardedPointCloudTrainer,
+                         LossSpikeDetector, PointCloudTrainConfig,
+                         PointCloudTrainer, TrainAbortError, init_opt_state,
+                         labeled_batch, labeled_tensor, segmentation_loss)
+from repro.train import faults as tf
+from repro.train.guard import guarded_apply_updates
+from repro.train.pointcloud import scene_features
+
+EXTENT = (32, 28, 16)
+N_CLASSES = 6
+
+
+def _setup(batch=3, seed=0, guard=None, **kw):
+    sb = scenes.scene_batch(seed=seed, batch=batch, kind="indoor",
+                            extent=EXTENT, labels=True, n_classes=N_CLASSES)
+    net = pc.tiny_segnet(in_channels=4, n_classes=N_CLASSES, width=8, depth=3)
+    session = compile_network(net, sb[0].layout, batch=batch)
+    st, lab = labeled_batch(sb, session.layout)
+    trainer = session.compile_train(guard=guard or GuardConfig(), **kw)
+    return sb, session, trainer, st, lab
+
+
+def _tree_bytes(tree):
+    return [np.asarray(x).tobytes() for x in jax.tree.leaves(tree)]
+
+
+def _clone_session(session, batch):
+    net = session.net
+    return compile_network(net, session.layout, batch=batch,
+                           params=session.params)
+
+
+# -- rung 1: in-graph non-finite skip is a bitwise no-op ----------------------
+
+@pytest.mark.parametrize("value", [float("nan"), float("inf")])
+def test_nonfinite_batch_is_bitwise_noop(value):
+    # single-scene batch: bisection has nothing to split, pure skip path
+    _, session, tr, st, lab = _setup(batch=1)
+    tr.step(st, lab)                      # one clean commit first
+    p_bytes = _tree_bytes(session.params)
+    o_bytes = _tree_bytes(tr.opt_state)
+    m = tr.step(tf.poison_nonfinite(st, rows=(0,), value=value), lab)
+    assert m["step_ok"] == 0.0
+    assert _tree_bytes(session.params) == p_bytes    # bitwise unchanged
+    assert _tree_bytes(tr.opt_state) == o_bytes      # step counter included
+    r = tr.last_report
+    assert r.action == "skipped" and r.nonfinite and not r.committed
+    assert r.quarantined == [0]           # the only scene IS the fault
+    assert tr.counters["nonfinite_steps"] == 1
+    assert tr.counters["steps_skipped"] == 1
+
+
+def test_guarded_equals_plain_on_clean_batches():
+    _, s1, guarded, st, lab = _setup(batch=3)
+    s2 = _clone_session(s1, batch=3)
+    plain = s2.compile_train()
+    assert isinstance(plain, PointCloudTrainer)
+    assert not isinstance(plain, GuardedPointCloudTrainer)
+    for _ in range(3):
+        m_g = guarded.step(st, lab)
+        m_p = plain.step(st, lab)
+    assert m_g["loss"] == m_p["loss"]
+    assert _tree_bytes(s1.params) == _tree_bytes(s2.params)
+    assert guarded.counters["steps_ok"] == 3
+
+
+# -- rung 2: loss-spike skip --------------------------------------------------
+
+def test_label_poison_trips_spike_detector_not_nan():
+    # out-of-range labels are clipped to a wrong-but-finite loss
+    # (segmentation_loss doc) — only the spike detector can catch them.
+    # Train the baseline down first (~0.75 at lr 2e-2): everything-wrong
+    # label poison then costs ~2.4, ~3x the recent median.
+    g = GuardConfig(spike_window=6, spike_factor=1.8, spike_min_history=4,
+                    bisect=False, rollback_after=100)
+    tcfg = PointCloudTrainConfig(opt=AdamWConfig(lr=2e-2, warmup_steps=2,
+                                                 total_steps=100))
+    sb = scenes.scene_batch(seed=0, batch=2, kind="indoor", extent=EXTENT,
+                            labels=True, n_classes=N_CLASSES)
+    net = pc.tiny_segnet(in_channels=4, n_classes=N_CLASSES, width=8,
+                         depth=3)
+    session = compile_network(net, sb[0].layout, batch=2)
+    st, lab = labeled_batch(sb, session.layout)
+    tr = session.compile_train(tcfg, guard=g)
+    for _ in range(15):
+        tr.step(st, lab)
+    assert tr.last_report.ok
+    p_bytes = _tree_bytes(session.params)
+    bad_lab = tf.poison_labels(lab, rows=range(int(st.count)), value=10 ** 6)
+    m = tr.step(st, bad_lab)
+    assert np.isfinite(m["loss"]) and m["step_ok"] == 1.0   # finite, "valid"
+    r = tr.last_report
+    assert r.spike and not r.nonfinite and r.action == "skipped"
+    assert _tree_bytes(session.params) == p_bytes
+    assert tr.counters["spikes"] == 1
+    # healthy training continues and the baseline is uncorrupted
+    m = tr.step(st, lab)
+    assert tr.last_report.ok and np.isfinite(m["loss"])
+
+
+def test_spike_detector_unit():
+    d = LossSpikeDetector(window=4, factor=10.0, min_history=3, floor=1e-3)
+    assert not d.is_spike(1e9)            # disarmed: no history
+    for v in (1.0, 1.1, 0.9):
+        d.record(v)
+    assert d.is_spike(50.0) and not d.is_spike(5.0)
+    for v in (2.0, 2.0, 2.0, 2.0):        # ring evicts the old baseline
+        d.record(v)
+    assert not d.is_spike(15.0) and d.is_spike(25.0)
+    d.reset()
+    assert not d.is_spike(1e9)
+
+
+# -- rung 3: bisection quarantine + the acceptance equivalence ----------------
+
+def test_bisection_quarantines_poisoned_scene_only():
+    _, session, tr, st, lab = _setup(batch=4, seed=2)
+    tr.step(st, lab)
+    m = tr.step(tf.poison_scene_nonfinite(st, 2), lab)
+    assert m["step_ok"] == 0.0
+    r = tr.last_report
+    assert r.action == "bisected" and r.nonfinite
+    assert r.quarantined == [2]
+    committed = sorted(i for grp in r.committed for i in grp)
+    assert committed == [0, 1, 3]         # every innocent scene trained
+    c = tr.counters
+    assert c["bisections"] == 1 and c["scenes_quarantined"] == 1
+    assert c["sub_steps_committed"] == len(r.committed)
+
+
+def test_poisoned_run_bitwise_equals_clean_run_on_healthy_work():
+    """The ISSUE acceptance criterion (skip path): a guarded run fed
+    NaN-poisoned batches finishes with params bitwise identical to a clean
+    PLAIN trainer run over exactly the committed work (full healthy
+    batches + the bisection sub-batches the reports recorded)."""
+    batch = 3
+    sb, s1, tr, st, lab = _setup(batch=batch, seed=3)
+    s2 = _clone_session(s1, batch=batch)
+
+    poisoned_at = {1: 1, 3: 0}            # step index -> poisoned scene
+    reports = []
+    for i in range(5):
+        x = (tf.poison_scene_nonfinite(st, poisoned_at[i])
+             if i in poisoned_at else st)
+        tr.step(x, lab)
+        reports.append(tr.last_report)
+
+    # replay the committed groups through a clean plain trainer
+    clean = s2.compile_train()
+    clouds = [(sc.coords, scene_features(sc), sc.labels) for sc in sb]
+    for r in reports:
+        for grp in r.committed:
+            if grp is None:
+                clean.step(st, lab)
+            else:
+                sst, slab = labeled_tensor([clouds[i] for i in grp],
+                                           s2.layout)
+                clean.step(sst, slab)
+
+    assert _tree_bytes(s1.params) == _tree_bytes(s2.params)
+    assert _tree_bytes(tr.opt_state) == _tree_bytes(clean.opt_state)
+    assert tr.counters["scenes_quarantined"] == 2
+    assert tr.counters["steps_ok"] == 3
+
+
+# -- rung 4+5: rollback and typed abort ---------------------------------------
+
+def test_rollback_restores_last_good(tmp_path):
+    g = GuardConfig(rollback_after=2, bisect=True)
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=False)
+    _, session, tr, st, lab = _setup(batch=1, guard=g, ckpt=mgr)
+    tr.step(st, lab)
+    good = tr.save(mark_good=True)        # the rollback anchor
+    good_bytes = _tree_bytes(session.params)
+    tr.step(st, lab)                      # drift past the anchor
+    bad = tf.poison_nonfinite(st, rows=(0,))
+    tr.step(bad, lab)                     # consec_bad = 1
+    tr.step(bad, lab)                     # consec_bad = 2 -> rollback
+    r = tr.last_report
+    assert r.action == "rolled_back" and r.rollback_to == good
+    assert _tree_bytes(session.params) == good_bytes
+    assert int(tr.opt_state.step) == good
+    assert tr.counters["rollbacks"] == 1
+    # training continues from the anchor
+    tr.step(st, lab)
+    assert tr.last_report.ok
+
+
+def test_abort_without_checkpoint_manager():
+    g = GuardConfig(rollback_after=2, bisect=False)
+    _, _, tr, st, lab = _setup(batch=1, guard=g)
+    bad = tf.poison_nonfinite(st, rows=(0,))
+    tr.step(bad, lab)
+    with pytest.raises(TrainAbortError) as ei:
+        tr.step(bad, lab)
+    assert ei.value.report is not None
+    assert ei.value.counters["nonfinite_steps"] == 2
+
+
+def test_abort_after_max_rollbacks(tmp_path):
+    g = GuardConfig(rollback_after=1, max_rollbacks=1, bisect=False)
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=False)
+    _, _, tr, st, lab = _setup(batch=1, guard=g, ckpt=mgr)
+    tr.step(st, lab)
+    tr.save(mark_good=True)
+    bad = tf.poison_nonfinite(st, rows=(0,))
+    tr.step(bad, lab)                     # rollback #1
+    assert tr.last_report.action == "rolled_back"
+    with pytest.raises(TrainAbortError) as ei:
+        tr.step(bad, lab)                 # rollback budget exhausted
+    assert "max_rollbacks" in str(ei.value)
+
+
+# -- checkpoint cadence, last_good advancement, resume ------------------------
+
+def test_auto_checkpoint_cadence_and_last_good_lag(tmp_path):
+    g = GuardConfig(ckpt_every=2, last_good_after=2)
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=10, async_save=False)
+    _, _, tr, st, lab = _setup(batch=2, guard=g, ckpt=mgr)
+    for i in range(4):
+        tr.step(st, lab)
+    mgr.wait()
+    assert mgr.complete_steps() == [2, 4]
+    # step-2 save was followed by 2 healthy steps -> blessed; step-4 not yet
+    assert mgr.last_good_step() == 2
+    assert tr.counters["checkpoint_saves"] == 2
+    tr.step(st, lab)
+    tr.step(st, lab)
+    assert mgr.last_good_step() == 4      # now blessed too
+
+
+def test_bad_steps_do_not_advance_last_good(tmp_path):
+    g = GuardConfig(ckpt_every=1, last_good_after=2, bisect=False,
+                    rollback_after=100)
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=10, async_save=False)
+    _, _, tr, st, lab = _setup(batch=1, guard=g, ckpt=mgr)
+    tr.step(st, lab)                      # save @1, pending
+    bad = tf.poison_nonfinite(st, rows=(0,))
+    tr.step(bad, lab)                     # skipped: must not bless step 1
+    assert mgr.last_good_step() is None
+    tr.step(st, lab)                      # healthy; save @2 now pending
+    tr.step(st, lab)
+    tr.step(st, lab)
+    assert mgr.last_good_step() == 2
+
+
+def test_resume_walks_past_corrupt_latest(tmp_path):
+    """The ISSUE acceptance criterion (fallback path): resume restores the
+    newest VERIFYING checkpoint when the latest is corrupt, and counters
+    record the checksum failure."""
+    d = str(tmp_path / "ck")
+    g = GuardConfig(ckpt_every=1, last_good_after=1)
+    mgr = CheckpointManager(d, keep=10, async_save=False)
+    _, s1, tr, st, lab = _setup(batch=2, guard=g, ckpt=mgr)
+    p0 = s1.params
+    snap = {}
+    for i in range(3):
+        tr.step(st, lab)
+        mgr.wait()
+        snap[int(tr.opt_state.step)] = _tree_bytes(s1.params)
+    tf.corrupt_checkpoint(d, 3, mode="flip")
+
+    # a fresh process: new session (same init), resume from the directory
+    net = s1.net
+    s2 = compile_network(net, s1.layout, batch=2, params=p0)
+    mgr2 = CheckpointManager(d, async_save=False)
+    tr2 = s2.compile_train(guard=True, ckpt=mgr2, resume=True)
+    assert int(tr2.opt_state.step) == 2   # 3 is corrupt, 2 verifies
+    assert _tree_bytes(s2.params) == snap[2]
+    assert tr2.counters["checksum_failures"] == 1
+    assert tr2.counters["last_good_step"] == 2
+    # and training continues bitwise on the same trajectory as the
+    # uninterrupted run: one step from the restored state == step 3's params
+    tr2.step(st, lab)
+    assert _tree_bytes(s2.params) == snap[3]
+
+
+def test_resume_empty_directory_is_noop(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=False)
+    _, s1, tr, st, lab = _setup(batch=1, guard=True, ckpt=mgr)
+    assert tr.resume() is None
+    assert int(tr.opt_state.step) == 0
+
+
+# -- satellite: zero-supervised-voxel loss pin --------------------------------
+
+def test_segmentation_loss_zero_supervised_voxels_is_finite_zero():
+    # all-ignore labels: Σw = 0; the maximum(Σw, 1) denominator must give an
+    # exact 0.0 (not 0/0 = NaN) with finite all-zero logit grads, both paths
+    logits = jnp.asarray(np.random.default_rng(0).normal(
+        size=(16, N_CLASSES)).astype(np.float32))
+    labels = jnp.full((16,), -1, jnp.int32)
+
+    def run(seg):
+        (l, a), g = jax.value_and_grad(
+            lambda lg: segmentation_loss(lg, labels, seg=seg),
+            has_aux=True)(logits)
+        return float(l), float(a), np.asarray(g)
+
+    sid = jnp.zeros((16,), jnp.int32)
+    seg = (sid, jnp.asarray([0]), jnp.asarray([16]), 1)
+    for s in (None, seg):
+        loss, acc, grads = run(s)
+        assert loss == 0.0 and acc == 0.0
+        assert np.all(grads == 0.0) and np.all(np.isfinite(grads))
+
+
+def test_guarded_step_commits_zero_supervised_batch():
+    # the guard must never have to catch this case: it is a healthy commit
+    _, session, tr, st, lab = _setup(batch=2)
+    m = tr.step(st, jnp.full_like(lab, -1))
+    assert m["step_ok"] == 1.0 and m["loss"] == 0.0
+    assert tr.last_report.ok
+
+
+# -- satellite: deterministic mirror of the property (test_property.py) ------
+
+def _rand_tree(seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32)
+                             * scale),
+            "b": {"w": jnp.asarray(rng.normal(size=(7,)).astype(np.float32)
+                                   * scale)}}
+
+
+@pytest.mark.parametrize("poison,where", [
+    (float("nan"), "a"), (float("inf"), "b"),
+    (float("-inf"), "a"), (float("nan"), "loss")])
+def test_guarded_apply_updates_never_writes_nonfinite(poison, where):
+    cfg = AdamWConfig(warmup_steps=1, total_steps=10)
+    params = _rand_tree(0)
+    opt = init_opt_state(params, cfg)
+    grads = _rand_tree(1, scale=1e-2)
+    loss = jnp.asarray(1.5)
+    if where == "a":
+        grads["a"] = grads["a"].at[2, 1].set(poison)
+    elif where == "b":
+        grads["b"]["w"] = grads["b"]["w"].at[0].set(poison)
+    else:
+        loss = jnp.asarray(poison)
+    p_bytes = _tree_bytes(params)
+    o_bytes = _tree_bytes(opt)
+    new_p, new_o, m = jax.jit(
+        lambda p, g, o, l: guarded_apply_updates(p, g, o, cfg, loss=l)
+    )(params, grads, opt, loss)
+    assert float(m["step_ok"]) == 0.0
+    assert _tree_bytes(new_p) == p_bytes      # bitwise passthrough
+    assert _tree_bytes(new_o) == o_bytes
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(new_p))
+
+
+def test_guarded_apply_updates_finite_path_applies():
+    cfg = AdamWConfig(warmup_steps=1, total_steps=10)
+    params = _rand_tree(0)
+    opt = init_opt_state(params, cfg)
+    grads = _rand_tree(1, scale=1e-2)
+    new_p, new_o, m = guarded_apply_updates(params, grads, opt, cfg,
+                                            loss=jnp.asarray(1.5))
+    assert float(m["step_ok"]) == 1.0
+    assert int(new_o.step) == 1
+    assert _tree_bytes(new_p) != _tree_bytes(params)
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(new_p))
