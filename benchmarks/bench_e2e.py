@@ -20,7 +20,6 @@ scene.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 import jax
@@ -29,9 +28,10 @@ import numpy as np
 from repro.core import SparseTensor, build_network_plan
 from repro.data import scenes
 from repro.models import pointcloud as pc
+from repro.obs import MetricsRegistry
 from repro.serve import compile_network
 from repro.serve.bucketing import bucket_capacity
-from .common import emit, timeit, us
+from .common import append_history, emit, timeit, us
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "BENCH_e2e.json")
 
@@ -51,6 +51,7 @@ def run(smoke: bool = False):
     small = _clouds(B, "indoor", (48, 40, 24))
     full = small if smoke else _clouds(B, "indoor", (96, 80, 36))
     rows, engines_rec = [], {}
+    reg = MetricsRegistry()   # per-repeat latencies → percentile export
 
     for engine in ["zdelta", "zdelta_pallas"]:
         # interpreter off-TPU: keep the pallas engine to the small scene
@@ -74,9 +75,12 @@ def run(smoke: bool = False):
                                          feats, layout=lo)
 
         t_hand = timeit(lambda: hand(stp.packed, stp.features), repeats=3,
-                        warmup=1)
-        t_sess1 = timeit(lambda: session(st1).features, repeats=3, warmup=1)
-        t_sessb = timeit(lambda: session(st_b).features, repeats=3, warmup=1)
+                        warmup=1, registry=reg,
+                        name=f"e2e/{engine}/hand_single")
+        t_sess1 = timeit(lambda: session(st1).features, repeats=3, warmup=1,
+                         registry=reg, name=f"e2e/{engine}/session_single")
+        t_sessb = timeit(lambda: session(st_b).features, repeats=3, warmup=1,
+                         registry=reg, name=f"e2e/{engine}/session_batched")
 
         rec = {
             "sizes": [len(c) for c, _ in clouds],
@@ -103,16 +107,10 @@ def run(smoke: bool = False):
         "note": ("session and baseline run at the same bucketed capacity; "
                  "pallas rows interpret off-TPU and use the small scene"),
         "engines": engines_rec,
+        # per-row latency percentiles from the timing loop (repro.obs)
+        "metrics": reg.snapshot(),
     }
-    hist = []
-    if os.path.exists(RESULTS):
-        with open(RESULTS) as f:
-            hist = json.load(f)
-            if not isinstance(hist, list):
-                hist = [hist]
-    hist.append(rec)
-    with open(RESULTS, "w") as f:
-        json.dump(hist, f, indent=1)
+    append_history(RESULTS, rec)
     emit(rows)
     return rows
 

@@ -32,7 +32,6 @@ cost only, see benchmarks/common.py) and is restricted to smoke size.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -42,9 +41,10 @@ import numpy as np
 
 from repro.data import scenes
 from repro.models import pointcloud as pc
+from repro.obs import MetricsRegistry
 from repro.serve import compile_network
 from repro.train.pointcloud import PointCloudTrainConfig, labeled_batch
-from .common import emit, timeit, us
+from .common import append_history, emit, timeit, us
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "BENCH_train.json")
 
@@ -79,6 +79,7 @@ def run(smoke: bool = False):
     net = pc.tiny_segnet(in_channels=4, n_classes=n_classes) if smoke \
         else pc.minkunet42(in_channels=4, n_classes=n_classes)
     rows, engines_rec = [], {}
+    reg = MetricsRegistry()   # per-repeat latencies → percentile export
     engines = ["zdelta", "zdelta_pallas"]
     if not smoke and jax.default_backend() != "tpu":
         engines = ["zdelta"]   # interpreter-priced pallas only at smoke size
@@ -92,17 +93,21 @@ def run(smoke: bool = False):
         t0 = time.perf_counter()
         trainer.step(st, labels)                  # compile + first step
         compile_s = time.perf_counter() - t0
-        t_step = timeit(lambda: trainer.step(st, labels), repeats=5, warmup=1)
+        t_step = timeit(lambda: trainer.step(st, labels), repeats=5, warmup=1,
+                        registry=reg, name=f"train/{engine}/step")
         # the self-healing wrapper (train.guard): same fused step plus one
         # in-graph isfinite flag + per-leaf selects and the host-side
         # ladder bookkeeping — guard_overhead prices "always-on" safety
         gtrainer = session.compile_train(PointCloudTrainConfig(), guard=True)
         gtrainer.step(st, labels)                 # compile the guarded graph
         t_gstep = timeit(lambda: gtrainer.step(st, labels),
-                         repeats=5, warmup=1)
-        t_fwd = timeit(lambda: session(st).features, repeats=5, warmup=1)
+                         repeats=5, warmup=1, registry=reg,
+                         name=f"train/{engine}/guarded_step")
+        t_fwd = timeit(lambda: session(st).features, repeats=5, warmup=1,
+                       registry=reg, name=f"train/{engine}/fwd")
         t_plan = timeit(lambda: session.plan(st).coords[0].packed,
-                        repeats=5, warmup=1)
+                        repeats=5, warmup=1, registry=reg,
+                        name=f"train/{engine}/plan")
         t_bn_seg, t_bn_sliced = _bn_stage_times(session, st,
                                                 net.specs[0].cout)
         n_bn = len(net.specs)
@@ -152,16 +157,10 @@ def run(smoke: bool = False):
                  "the hot path, sliced = the retired O(S*cap) dynamic_slice "
                  "+ one-hot formulation kept as baseline"),
         "engines": engines_rec,
+        # per-row latency percentiles from the timing loop (repro.obs)
+        "metrics": reg.snapshot(),
     }
-    hist = []
-    if os.path.exists(RESULTS):
-        with open(RESULTS) as f:
-            hist = json.load(f)
-            if not isinstance(hist, list):
-                hist = [hist]
-    hist.append(rec)
-    with open(RESULTS, "w") as f:
-        json.dump(hist, f, indent=1)
+    append_history(RESULTS, rec)
     emit(rows)
     return rows
 

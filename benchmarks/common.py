@@ -9,8 +9,10 @@ live in EXPERIMENTS.md §Roofline, not here.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,18 +20,43 @@ import numpy as np
 
 from repro.core import build_coord_set, hbm_bytes_model, l1_partition
 from repro.data import scenes
+from repro.obs import MetricsRegistry
 
 
-def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
-    """Median wall time (seconds) of a jitted callable."""
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2,
+           registry: Optional[MetricsRegistry] = None,
+           name: Optional[str] = None) -> float:
+    """Median wall time (seconds) of a jitted callable — the one
+    warmup/median loop every bench shares. With ``registry`` and ``name``,
+    each timed repeat additionally records into ``registry.histogram(name)``
+    so the bench payload carries p50/p90/p99 percentiles (the registry
+    snapshot) alongside the median."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        if registry is not None and name is not None:
+            registry.histogram(name).record(dt)
+        ts.append(dt)
     return sorted(ts)[len(ts) // 2]
+
+
+def append_history(path: str, rec: dict) -> None:
+    """Append ``rec`` to the JSON history list at ``path`` — the
+    BENCH_*.json accumulate-history contract (one list, newest last),
+    previously copy-pasted into each bench."""
+    hist = []
+    if os.path.exists(path):
+        with open(path) as f:
+            hist = json.load(f)
+            if not isinstance(hist, list):
+                hist = [hist]
+    hist.append(rec)
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1)
 
 
 def us(x: float) -> float:

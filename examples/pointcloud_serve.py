@@ -6,6 +6,10 @@ SpiraSession call per batch, and are answered with per-scene logits on the
 scene's own voxels. Capacity bucketing inside the session keeps compiles at
 one per bucket no matter how sizes vary.
 
+The run doubles as the observability demo (``repro.obs``): the engine
+records onto the session's metrics registry, and the end of the run prints
+the snapshot — rolling QPS, p50/p99 serve latency, per-outcome counts.
+
 Run:  PYTHONPATH=src python examples/pointcloud_serve.py [--smoke]
 """
 import argparse
@@ -59,3 +63,15 @@ print(f"compiled buckets: {session.compile_count} "
       f"{max(len(r.coords) for r in requests)})")
 print(f"request 0 answer: logits {requests[0].logits.shape} on "
       f"{requests[0].voxels.shape[0]} voxels ✓")
+
+# -- the metrics snapshot (engine + session share one registry) -------------
+snap = session.metrics.snapshot()
+lat = snap["histograms"]["serve_latency_ok"]
+wait = snap["histograms"]["serve_queue_wait"]
+print(f"metrics: qps(60s)={snap['rates']['serve_qps']:.2f}  "
+      f"latency p50={lat['p50'] * 1e3:.2f}ms p99={lat['p99'] * 1e3:.2f}ms "
+      f"({lat['count']} served)  "
+      f"queue_wait p99={wait['p99'] * 1e3:.2f}ms")
+outcomes = {k[len("serve_"):]: v for k, v in snap["counters"].items()
+            if k.startswith("serve_")}
+print(f"outcome counts: {outcomes}")

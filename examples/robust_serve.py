@@ -13,9 +13,14 @@ tuned too small for the scene replans at the next escalation level and
 returns logits bitwise equal to the lossless network's, with the replan
 visible in the HealthReport.
 
+The end of the run asserts the observability contract (``repro.obs``, the
+CI obs stage): all engines above recorded onto the shared session registry,
+its JSON snapshot round-trips, and the Prometheus text export parses.
+
 Run:  PYTHONPATH=src python examples/robust_serve.py [--smoke]
 """
 import argparse
+import json
 
 import numpy as np
 
@@ -110,3 +115,22 @@ n = int(out_ref.count)
 np.testing.assert_array_equal(np.asarray(out.features)[:n],
                               np.asarray(out_ref.features)[:n])
 print("escalated output bitwise equal to lossless ✓")
+
+# --- observability: every engine above fed one shared registry -------------
+from repro.obs import parse_prometheus_text
+
+reg = session.metrics
+assert eng.metrics is reg and flaky.metrics is reg  # FaultySession passthrough
+snap = reg.snapshot()
+assert json.loads(json.dumps(snap)) == snap, "snapshot must round-trip JSON"
+# histograms accumulate across all engines; the faulty traffic is in there
+assert snap["histograms"]["serve_latency_ok"]["count"] >= 2 * B
+assert "serve/pack" in snap["histograms"]
+assert "serve/dispatch" in snap["histograms"]
+assert snap["counters"]["serve_retries"] == 1          # the flaky engine's
+assert snap["counters"]["session_runs"] >= 1
+samples = parse_prometheus_text(reg.to_prometheus_text())  # raises if bad
+assert "spira_serve_admitted" in samples
+assert "spira_serve_latency_ok_bucket" in samples
+print(f"metrics: {len(samples)} prometheus series, snapshot round-trips, "
+      f"qps(60s)={snap['rates']['serve_qps']:.2f} ✓")

@@ -66,7 +66,10 @@ p0 = session.params
 st, lab = labeled_batch(sb, session.layout)
 
 with tempfile.TemporaryDirectory() as ckdir:
-    mgr = CheckpointManager(ckdir, keep=10, async_save=False)
+    # the manager shares the session's registry, so step-phase timings,
+    # guard counters and checkpoint bytes export from one surface
+    mgr = CheckpointManager(ckdir, keep=10, async_save=False,
+                            metrics=session.metrics)
     guard = GuardConfig(ckpt_every=1, last_good_after=1)
     trainer = session.compile_train(guard=guard, ckpt=mgr)
 
@@ -129,3 +132,25 @@ with tempfile.TemporaryDirectory() as ckdir:
         "post-resume step diverged from the uninterrupted trajectory"
     print(f"post-resume step bitwise == uninterrupted step {last} ✓ "
           f"({jax.devices()[0].platform})")
+
+    # -- observability: train + ckpt metrics on one registry ---------------
+    import json as _json
+
+    from repro.obs import parse_prometheus_text
+
+    reg = session.metrics
+    snap = reg.snapshot()
+    assert _json.loads(_json.dumps(snap)) == snap, \
+        "snapshot must round-trip JSON"
+    assert snap["counters"]["train_steps_total"] == steps
+    assert snap["counters"]["train_nonfinite_steps"] == len(poisoned_at)
+    assert snap["counters"]["ckpt_bytes_written"] > 0
+    assert snap["histograms"]["train/step"]["count"] >= steps
+    assert snap["histograms"]["ckpt/save"]["count"] == \
+        trainer.counters["checkpoint_saves"]
+    samples = parse_prometheus_text(reg.to_prometheus_text())  # raises if bad
+    assert "spira_train_steps_total" in samples
+    assert "spira_ckpt_save_bucket" in samples
+    print(f"metrics: {len(samples)} prometheus series, snapshot "
+          f"round-trips, ckpt bytes={snap['counters']['ckpt_bytes_written']}"
+          f" ✓")

@@ -88,6 +88,16 @@ python -m pytest -x -q \
   tests/test_ckpt_robust.py::test_async_write_failure_reraised_on_next_save
 python examples/robust_train.py --smoke >/dev/null
 
+# obs: the unified observability layer (repro.obs). The metrics/span unit
+# suite pins histogram edges, deterministic FakeClock snapshots, the golden
+# Prometheus export and the zero-overhead invariant (instrumentation changes
+# neither results nor compile/search counts); both robust examples then run
+# with metrics enabled and assert in-process that the Prometheus text export
+# parses (name/type/value grammar) and the JSON snapshot round-trips.
+python -m pytest -x -q tests/test_obs.py
+python examples/robust_serve.py --smoke >/dev/null
+python examples/robust_train.py --smoke >/dev/null
+
 # train bench must stay runnable (writes BENCH_train.json: fwd vs fwd+bwd
 # step latency + the plan's share of a step)
 python -m benchmarks.bench_train --smoke >/dev/null

@@ -61,6 +61,8 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs import MetricsRegistry, default_registry, span
+
 MANIFEST_FORMAT = 2
 LAST_GOOD_FILE = "last_good.json"
 
@@ -111,10 +113,14 @@ def _crc(a: np.ndarray) -> int:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 metrics: Optional[MetricsRegistry] = None):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
+        # save/restore duration histograms + byte counters (repro.obs);
+        # recording is thread-safe, so the async writer participates
+        self.metrics = metrics if metrics is not None else default_registry()
         self._thread: Optional[threading.Thread] = None
         self._write_error: Optional[BaseException] = None
         self.verify_failures = 0      # checkpoints that failed verification
@@ -165,16 +171,19 @@ class CheckpointManager:
         for group, tree in blob.items():
             for k, v in tree.items():
                 arrays[f"{group}::{k}"] = v
-        self._write_npz(tmp, arrays)
-        os.replace(tmp, path)  # atomic
-        if self._post_npz_hook is not None:
-            self._post_npz_hook(step)
-        meta = {**meta, "format": MANIFEST_FORMAT,
-                "checksums": {k: _crc(v) for k, v in arrays.items()}}
-        mpath = os.path.join(self.dir, f"ckpt_{step:08d}.json")
-        with open(mpath + ".tmp", "w") as f:
-            json.dump(meta, f)
-        os.replace(mpath + ".tmp", mpath)  # the commit record (module doc)
+        with span("ckpt/save", self.metrics):
+            self._write_npz(tmp, arrays)
+            os.replace(tmp, path)  # atomic
+            if self._post_npz_hook is not None:
+                self._post_npz_hook(step)
+            meta = {**meta, "format": MANIFEST_FORMAT,
+                    "checksums": {k: _crc(v) for k, v in arrays.items()}}
+            mpath = os.path.join(self.dir, f"ckpt_{step:08d}.json")
+            with open(mpath + ".tmp", "w") as f:
+                json.dump(meta, f)
+            os.replace(mpath + ".tmp", mpath)  # the commit record (module doc)
+        self.metrics.counter("ckpt_bytes_written").inc(
+            sum(int(v.nbytes) for v in arrays.values()))
         self._gc()
 
     def _join_writer(self):
@@ -287,9 +296,10 @@ class CheckpointManager:
         err: Optional[CheckpointCorruptionError] = None
         for s in candidates:
             try:
-                return self._restore_one(s, params_template, opt_template,
-                                         shardings, opt_shardings,
-                                         verify=verify)
+                with span("ckpt/restore", self.metrics):
+                    return self._restore_one(s, params_template, opt_template,
+                                             shardings, opt_shardings,
+                                             verify=verify)
             except CheckpointCorruptionError as e:
                 self.verify_failures += 1
                 if err is None:
@@ -363,4 +373,6 @@ class CheckpointManager:
         params = rebuild(params_template, "params", shardings)
         opt = (rebuild(opt_template, "opt", opt_shardings)
                if opt_template is not None else None)
+        self.metrics.counter("ckpt_bytes_read").inc(
+            sum(int(v.nbytes) for v in data.values()))
         return params, opt, int(meta.get("step", step))

@@ -59,9 +59,11 @@ class NetworkPlan:
     byproduct of plan building — today the number of Pallas superwindow
     (tile, offset-group) cells that overflowed their DMA'd window and were
     repaired by the XLA fallback (0 for non-Pallas engines). Serving
-    surfaces them in ``SpiraSession``'s per-call HealthReport; a persistent
-    nonzero count means the tuner's ``plan_superwindow`` W is undersized
-    for the traffic."""
+    surfaces them in ``SpiraSession``'s per-call HealthReport and lifts
+    them into per-layer gauges on the session's metrics registry
+    (``plan_window_overflow_cells_<layer>``, see ``repro.obs``); a
+    persistent nonzero count means the tuner's ``plan_superwindow`` W is
+    undersized for the traffic."""
 
     coords: Dict[int, CoordSet]       # level m -> coordinate set
     kmaps: Dict[str, KernelMap]       # layer name -> kernel map

@@ -55,17 +55,36 @@ from .voxel import CoordSet, pad_value
 # per train step" is asserted against these (tests/test_grad.py). Because
 # jit caches traces, call ``jax.clear_caches()`` before tracing the graphs
 # you want to compare.
+#
+# Backed by the process-global metrics registry rather than a bare module
+# dict: tracing can happen off the main thread (the serving engine's
+# pack-ahead worker, async checkpoint restores that replan), and the
+# registry counter takes a lock per increment — the former ``SEARCH_CALLS``
+# dict's read-modify-write could drop counts under that race. The function
+# API below is unchanged.
 
-SEARCH_CALLS = {"count": 0}
+_SEARCH_CALLS = None  # lazily bound registry counter
+
+
+def _search_counter():
+    global _SEARCH_CALLS
+    if _SEARCH_CALLS is None:
+        from repro.obs import default_registry
+        _SEARCH_CALLS = default_registry().counter("zdelta_search_calls")
+    return _SEARCH_CALLS
+
+
+def _count_search() -> None:
+    _search_counter().inc()
 
 
 def reset_search_calls() -> None:
-    SEARCH_CALLS["count"] = 0
+    _search_counter().set(0)
 
 
 def search_call_count() -> int:
     """Kernel-map searches traced since the last reset (module doc above)."""
-    return SEARCH_CALLS["count"]
+    return _search_counter().value
 
 
 def zdelta_offsets(K: int, stride: int, layout: BitLayout) -> tuple[np.ndarray, jax.Array, int]:
@@ -95,7 +114,7 @@ def zdelta_search(
     first ``symmetry_anchor_count(K)`` anchors only. Padded output rows
     are −1.
     """
-    SEARCH_CALLS["count"] += 1
+    _count_search()
     arr = inputs.packed                       # [N] sorted, PAD-tailed
     n = arr.shape[0]
     pad = pad_value(arr.dtype)
@@ -134,7 +153,7 @@ def simple_bsearch(
     """Baseline from the paper's Fig. 10: one full binary search per query
     (|Vq|·K³ searches), packed-native, no pre-processing. Identical output
     layout to :func:`zdelta_search` when given group-ordered offsets."""
-    SEARCH_CALLS["count"] += 1
+    _count_search()
     arr = inputs.packed
     n = arr.shape[0]
     pad = pad_value(arr.dtype)

@@ -98,8 +98,8 @@ def zdelta_window_search(
     interpret: bool = False,
 ):
     """Returns (kernel map [M, K³], overflow counts [n_tiles, K²])."""
-    from repro.core.zdelta import SEARCH_CALLS
-    SEARCH_CALLS["count"] += 1
+    from repro.core.zdelta import _count_search
+    _count_search()
     arr = inputs.packed
     n = arr.shape[0]
     mcap = outputs.packed.shape[0]
@@ -211,8 +211,8 @@ def zdelta_superwindow_search(
     :func:`zdelta_window_search`); columns follow the order of
     ``packed_anchors`` (group g, member r → column g·K + r).
     """
-    from repro.core.zdelta import SEARCH_CALLS
-    SEARCH_CALLS["count"] += 1
+    from repro.core.zdelta import _count_search
+    _count_search()
     arr = inputs.packed
     n = arr.shape[0]
     mcap = outputs.packed.shape[0]

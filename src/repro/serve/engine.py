@@ -53,6 +53,29 @@ fault-injection suite (``tests/test_faults.py``) and the CI robustness
 stage assert against. Session degradation (WS pair drops, escalation
 replans — ``serve.session.HealthReport``) rides on each request's
 ``health`` and aggregates into ``counters["overflow_replans"]``.
+
+Metrics (the contract's observability surface, ``repro.obs``)
+-------------------------------------------------------------
+The engine writes to one :class:`~repro.obs.MetricsRegistry` — by default
+the session's (so plan/serve/train share a surface), overridable via the
+``metrics=`` argument. The degraded-mode counters above ARE registry
+counters (``serve_<name>``): the plain-int attributes (``eng.shed``) and
+the ``counters`` dict are live views over the registry, so the two can
+never disagree, and ``+=`` / ``=`` on them keeps working. On top of the
+counters the engine records, per the ROADMAP's serving-hardening item:
+
+* ``serve_queue_wait`` histogram — submit→drain time per request;
+* ``serve/pack`` / ``serve/dispatch`` histograms — host pack time and
+  per-attempt session-call time (``obs.trace.span``, host side only —
+  never inside the jitted graph, see ``repro.obs.trace``);
+* ``serve_latency_<outcome>`` histograms — submit→terminal-outcome
+  latency, one histogram per outcome so SLO percentiles aren't polluted
+  by shed/expired requests;
+* ``serve_qps`` rolling rate — scenes served over the trailing 60 s.
+
+Instrumentation is observational only: engine answers stay bitwise
+identical to an uninstrumented run, and session compile/search counts are
+unchanged (pinned in tests/test_obs.py).
 """
 from __future__ import annotations
 
@@ -69,6 +92,7 @@ from repro.core.sparse_tensor import SparseTensor
 from repro.core.validate import ValidationError
 from repro.models import transformer as tf
 from repro.models.common import ModelConfig
+from repro.obs import CounterView, MetricsRegistry, span
 from .faults import TransientError
 
 
@@ -105,6 +129,9 @@ class PointCloudRequest:
     error: Optional[str] = None        # structured message for non-ok ends
     health: Optional[object] = None    # serve.session.HealthReport when the
                                        # session exports one
+    submitted_at: Optional[float] = None   # engine clock at submit; feeds
+                                           # the per-outcome latency
+                                           # histograms (module doc)
 
     @property
     def finished(self) -> bool:
@@ -156,6 +183,21 @@ class PointCloudServeEngine:
     main thread wait and is not counted).
     """
 
+    # Registry-backed counters (module doc, "Metrics"): plain-int attribute
+    # surface over `self.metrics` counters. `__init__` zeroes them, so an
+    # engine's counts are its own even on a shared registry — two engines
+    # sharing one registry is not a supported aggregation scheme.
+    batches_run = CounterView("serve_batches_run")
+    scenes_served = CounterView("serve_scenes_served")
+    packs_overlapped = CounterView("serve_packs_overlapped")
+    admitted = CounterView("serve_admitted")
+    shed = CounterView("serve_shed")
+    invalid = CounterView("serve_invalid")
+    quarantined = CounterView("serve_quarantined")
+    deadline_expired = CounterView("serve_deadline_expired")
+    retries = CounterView("serve_retries")
+    overflow_replans = CounterView("serve_overflow_replans")
+
     def __init__(self, session, max_batch: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
                  pack_ahead: bool = False,
@@ -165,7 +207,8 @@ class PointCloudServeEngine:
                  backoff: float = 0.01,
                  backoff_cap: float = 0.5,
                  sleep: Callable[[float], None] = time.sleep,
-                 transient: Optional[Callable[[BaseException], bool]] = None):
+                 transient: Optional[Callable[[BaseException], bool]] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         # Duck-typed: a compiled SpiraSession or anything shaped like one
         # (callable, with layout/num_scenes) — the fault-injection wrapper
         # serve.faults.FaultySession drops in here.
@@ -177,6 +220,12 @@ class PointCloudServeEngine:
                 f"{type(session).__name__}; build one with "
                 "repro.serve.compile_network(net, layout, batch=B).")
         self.session = session
+        # One registry across plan → serve: prefer the caller's, then the
+        # session's, else a private one on the engine clock. Must exist
+        # before the CounterView zeroing below.
+        self.metrics = (metrics
+                        or getattr(session, "metrics", None)
+                        or MetricsRegistry(clock=clock))
         self.max_batch = min(max_batch or session.num_scenes,
                              session.num_scenes)
         self.pending: deque[PointCloudRequest] = deque()
@@ -213,6 +262,7 @@ class PointCloudServeEngine:
     def submit(self, req: PointCloudRequest) -> bool:
         """Admit a request, or shed it (``outcome="shed"``) when the bounded
         queue is full. Returns whether the request was admitted."""
+        req.submitted_at = self._clock()
         if self.max_queue is not None and len(self.pending) >= self.max_queue:
             self._finish(req, "shed",
                          f"queue full ({self.max_queue} pending); retry later")
@@ -229,6 +279,13 @@ class PointCloudServeEngine:
                 error: str) -> None:
         req.outcome = outcome
         req.error = error
+        self._record_latency(req)
+
+    def _record_latency(self, req: PointCloudRequest) -> None:
+        """Submit→terminal latency into the per-outcome histogram."""
+        if req.submitted_at is not None:
+            self.metrics.histogram(f"serve_latency_{req.outcome}").record(
+                self._clock() - req.submitted_at)
 
     def _drain_batch(self) -> Tuple[List[PointCloudRequest], List[float],
                                     List[PointCloudRequest]]:
@@ -250,12 +307,14 @@ class PointCloudServeEngine:
                 continue
             batch.append(req)
             arrivals.append(at)
+            self.metrics.histogram("serve_queue_wait").record(now - at)
         return batch, arrivals, expired
 
     def _pack(self, batch: List[PointCloudRequest]) -> SparseTensor:
-        return SparseTensor.from_point_clouds(
-            [(r.coords, r.features) for r in batch], self.session.layout,
-            validate=self.validate)
+        with span("serve/pack", self.metrics):
+            return SparseTensor.from_point_clouds(
+                [(r.coords, r.features) for r in batch], self.session.layout,
+                validate=self.validate)
 
     def _answer(self, batch: List[PointCloudRequest], out, health) -> None:
         """Scatter per-scene logits back onto the requests. Materializes
@@ -267,6 +326,8 @@ class PointCloudServeEngine:
             req.health = health
             req.done = True
             req.outcome = "ok"
+            self._record_latency(req)
+        self.metrics.rate("serve_qps").mark(len(batch))
         if health is not None:
             self.overflow_replans += health.replans
         self.batches_run += 1
@@ -281,9 +342,10 @@ class PointCloudServeEngine:
         attempt = 0
         while True:
             try:
-                if hasattr(self.session, "run_with_health"):
-                    return self.session.run_with_health(st)
-                return self.session(st), None
+                with span("serve/dispatch", self.metrics):
+                    if hasattr(self.session, "run_with_health"):
+                        return self.session.run_with_health(st)
+                    return self.session(st), None
             except Exception as e:
                 if not self._transient(e) or attempt >= self.max_retries:
                     raise

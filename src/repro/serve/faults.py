@@ -141,6 +141,12 @@ class FaultySession:
     def net(self):
         return self.session.net
 
+    @property
+    def metrics(self):
+        # engines built over the wrapper inherit the wrapped session's
+        # registry, same as over a bare session
+        return getattr(self.session, "metrics", None)
+
     def _gate(self, st) -> None:
         i = self.calls
         self.calls += 1

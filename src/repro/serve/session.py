@@ -80,6 +80,7 @@ from repro.core.spconv import SpConvSpec
 from repro.kernels.segsum import SegmentSpec
 from repro.models.pointcloud import (PointCloudNet, init_pointcloud,
                                      packed_segments, pointcloud_forward)
+from repro.obs import MetricsRegistry, span
 from .bucketing import bucket_capacity
 
 
@@ -160,8 +161,16 @@ class SpiraSession:
     # bounded retries for pair-capacity overflow (class doc); 0 restores
     # the old serve-truncated-but-report behavior
     max_overflow_replans: int = 2
+    # One observability surface for the whole pipeline (repro.obs): the
+    # engine and trainer built on this session inherit this registry, so
+    # plan/serve/train metrics export together. Spans stay OUTSIDE the
+    # jitted graphs (obs.trace) — instrumentation never changes
+    # compile_count or results (pinned in tests/test_obs.py).
+    metrics: Optional[MetricsRegistry] = None
 
     def __post_init__(self):
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
         specs = self.net.conv_specs()
         self._fns: Dict[int, object] = {}
         self._fn = self._make_fn(0)   # escalation level 0 = the tuned plan
@@ -262,9 +271,15 @@ class SpiraSession:
             bucket = self._esc_bucket(base, esc)
             stp = st.pad_to(bucket)
             fn = self._make_fn(esc)
-            logits, out_packed, out_count, drops, ovf = fn(
-                self.params, stp.packed, stp.features)
-            dropped = {k: int(v) for k, v in drops.items()}
+            # Span at the host boundary around the fused plan+forward call
+            # PLUS the drop materialization (the int() casts block on the
+            # device), so it measures execution, not async dispatch.
+            # Escalated retries record separately as session/replan.
+            with span("session/call" if esc == 0 else "session/replan",
+                      self.metrics):
+                logits, out_packed, out_count, drops, ovf = fn(
+                    self.params, stp.packed, stp.features)
+                dropped = {k: int(v) for k, v in drops.items()}
             if (sum(dropped.values()) == 0
                     or esc >= self.max_overflow_replans):
                 break
@@ -275,11 +290,28 @@ class SpiraSession:
             ws_dropped_pairs=dropped,
             window_overflow_cells={k: int(v) for k, v in ovf.items()})
         self.last_health = health
+        self._record_health(health)
         # Logits live on the network's OUTPUT level coordinate set (== the
         # input set only for submanifold-ending segmentation nets).
         out = SparseTensor(features=logits, packed=out_packed,
                            count=out_count, layout=self.layout)
         return out, health
+
+    def _record_health(self, health: HealthReport) -> None:
+        """Fold one call's HealthReport into the registry: run/replan
+        counters, bucket/escalation gauges, and the per-layer kernel-map
+        stats — WS drops from the health report, window-overflow cells
+        lifted from ``NetworkPlan.stats`` — as per-layer gauges."""
+        reg = self.metrics
+        reg.counter("session_runs").inc()
+        if health.replans:
+            reg.counter("session_replans").inc(health.replans)
+        reg.gauge("session_bucket").set(health.bucket)
+        reg.gauge("session_escalation").set(health.escalation)
+        for name, v in health.ws_dropped_pairs.items():
+            reg.gauge(f"session_ws_dropped_pairs_{name}").set(v)
+        for name, v in health.window_overflow_cells.items():
+            reg.gauge(f"plan_window_overflow_cells_{name}").set(v)
 
     def _esc_bucket(self, base_bucket: int, esc: int) -> int:
         """Escalated capacity bucket: the next pow2 bucket per level,
@@ -337,8 +369,13 @@ class SpiraSession:
         """The network plan the session would use for ``st`` (bucketed) —
         for inspection/benchmarks; the hot path fuses this into ``run``."""
         ensure_sparse_tensor(st, where="SpiraSession.plan")
-        stp = st.pad_to(self._bucket(st.capacity))
-        return self._plan_fn(stp.packed)
+        # The standalone plan span is the plan-vs-forward split: the hot
+        # path fuses planning into session/call, so plan time is observed
+        # here (inspection/benchmarks) while session/call covers the fused
+        # plan+forward whole.
+        with span("session/plan", self.metrics):
+            stp = st.pad_to(self._bucket(st.capacity))
+            return self._plan_fn(stp.packed)
 
     def _bucket(self, n: int) -> int:
         return bucket_capacity(n, min_bucket=self.min_bucket,
@@ -389,6 +426,7 @@ def compile_network(
     segment_backend: str = "auto",
     max_overflow_replans: int = 2,
     dtype=jnp.float32,
+    metrics: Optional[MetricsRegistry] = None,
 ) -> SpiraSession:
     """Build a :class:`SpiraSession` — the compile-once front door.
 
@@ -419,6 +457,9 @@ def compile_network(
       co-tuned on *step* time (fwd + transposed bwd —
       ``core.tuner.tune_segment_backend_measure``, the train-mode
       objective) and the tuned spec persisted on the session.
+    * ``metrics`` — a shared :class:`~repro.obs.MetricsRegistry`; the
+      session (and any engine/trainer built on it) records there. Omitted,
+      the session creates a private one at ``session.metrics``.
     """
     if (1 << layout.bb) < batch:
         layout = layout.with_batch(batch)
@@ -438,7 +479,8 @@ def compile_network(
                         downsample_method=downsample_method,
                         min_bucket=min_bucket, max_bucket=max_bucket,
                         segment=seg_spec,
-                        max_overflow_replans=max_overflow_replans)
+                        max_overflow_replans=max_overflow_replans,
+                        metrics=metrics)
 
 
 def _tune_segment(seg_spec: SegmentSpec, tune_sample: SparseTensor, *,

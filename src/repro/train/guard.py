@@ -73,6 +73,7 @@ import numpy as np
 from repro.ckpt.manager import CheckpointError, CheckpointManager
 from repro.core.packing import BitLayout
 from repro.core.sparse_tensor import SparseTensor
+from repro.obs import CounterView, span
 from .optimizer import OptState, apply_updates, global_norm
 from .pointcloud import (PointCloudTrainConfig, PointCloudTrainer,
                          labeled_tensor, make_segmentation_loss_fn)
@@ -264,6 +265,21 @@ class GuardedPointCloudTrainer(PointCloudTrainer):
     directory) enables auto-checkpointing, the ``last_good`` rollback
     anchor and :meth:`resume`."""
 
+    # Registry-backed counters (``repro.obs``): plain-int attribute views
+    # over ``self.metrics`` counters — the session's registry by default
+    # (PointCloudTrainer.__init__), so serve and train counters export
+    # from one surface. ``__init__`` zeroes them below.
+    steps_total = CounterView("train_steps_total")
+    steps_ok = CounterView("train_steps_ok")
+    steps_skipped = CounterView("train_steps_skipped")
+    nonfinite_steps = CounterView("train_nonfinite_steps")
+    spikes = CounterView("train_spikes")
+    bisections = CounterView("train_bisections")
+    sub_steps_committed = CounterView("train_sub_steps_committed")
+    scenes_quarantined = CounterView("train_scenes_quarantined")
+    rollbacks = CounterView("train_rollbacks")
+    checkpoint_saves = CounterView("train_checkpoint_saves")
+
     def __init__(self, session, tcfg: Optional[PointCloudTrainConfig] = None,
                  *, guard: Optional[GuardConfig] = None,
                  ckpt=None, opt_state=None, resume: bool = False):
@@ -274,7 +290,8 @@ class GuardedPointCloudTrainer(PointCloudTrainer):
             downsample_method=session.downsample_method,
             segment=getattr(session, "segment", None)))
         self.ckpt: Optional[CheckpointManager] = (
-            CheckpointManager(ckpt) if isinstance(ckpt, str) else ckpt)
+            CheckpointManager(ckpt, metrics=self.metrics)
+            if isinstance(ckpt, str) else ckpt)
         self._spikes = LossSpikeDetector(
             window=self.guard.spike_window, factor=self.guard.spike_factor,
             min_history=self.guard.spike_min_history,
@@ -323,11 +340,15 @@ class GuardedPointCloudTrainer(PointCloudTrainer):
         ring) only when healthy; returns (metrics, status) with status in
         {"ok", "nonfinite", "spike"}. Never mutates state on a bad step —
         the functional update makes "skip" exact."""
-        stp, labp = self._prepare(st, labels)
-        new_p, new_o, metrics = self._step(
-            self.session.params, self.opt_state, stp.packed, stp.features,
-            labp)
-        m = {k: float(v) for k, v in metrics.items()}
+        with span("train/pack", self.metrics):
+            stp, labp = self._prepare(st, labels)
+        # span covers the jitted call plus the float() materializations —
+        # real step execution, not async dispatch (repro.obs.trace)
+        with span("train/step", self.metrics):
+            new_p, new_o, metrics = self._step(
+                self.session.params, self.opt_state, stp.packed, stp.features,
+                labp)
+            m = {k: float(v) for k, v in metrics.items()}
         if m["step_ok"] < 0.5:
             return m, "nonfinite"
         if self._spikes.is_spike(m["loss"]):
@@ -521,7 +542,8 @@ class GuardedPointCloudTrainer(PointCloudTrainer):
         if len(scenes) > 1:
             self.bisections += 1
             report.action = "bisected"
-            committed = self._bisect(scenes, report)
+            with span("train/bisect", self.metrics):
+                committed = self._bisect(scenes, report)
         elif len(scenes) == 1:
             # single-scene batch: nothing to bisect — the scene IS the fault
             report.quarantined.append(scenes[0][0])

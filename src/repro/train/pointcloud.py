@@ -60,6 +60,7 @@ from repro.core.packing import BitLayout
 from repro.core.sparse_tensor import SparseTensor, ensure_sparse_tensor
 from repro.data.scenes import GUARD, Scene
 from repro.kernels.segsum import SegmentSpec, segment_sum
+from repro.obs import MetricsRegistry, span
 from repro.models.pointcloud import (PointCloudNet, packed_segments,
                                      pointcloud_forward)
 from .optimizer import AdamWConfig, OptState, apply_updates, init_opt_state
@@ -320,6 +321,10 @@ class PointCloudTrainer:
     def __init__(self, session, tcfg: Optional[PointCloudTrainConfig] = None,
                  *, opt_state: Optional[OptState] = None):
         self.session = session
+        # train metrics land on the session's registry (one plan→serve→
+        # train surface, repro.obs); spans stay outside the jitted step
+        self.metrics = (getattr(session, "metrics", None)
+                        or MetricsRegistry())
         self.tcfg = tcfg or PointCloudTrainConfig()
         self.opt_state = opt_state if opt_state is not None else \
             init_opt_state(session.params, self.tcfg.opt)
@@ -357,12 +362,17 @@ class PointCloudTrainer:
     def step(self, st: SparseTensor, labels) -> dict:
         """One optimization step on a (batched) labeled SparseTensor.
         Returns float metrics; updates ``session.params`` / ``opt_state``."""
-        stp, labels = self._prepare(st, labels)
-        params, self.opt_state, metrics = self._step(
-            self.session.params, self.opt_state, stp.packed, stp.features,
-            labels)
+        with span("train/pack", self.metrics):
+            stp, labels = self._prepare(st, labels)
+        # span covers the jitted call plus the float() materializations
+        # below — i.e. real step execution, not async dispatch
+        with span("train/step", self.metrics):
+            params, self.opt_state, metrics = self._step(
+                self.session.params, self.opt_state, stp.packed, stp.features,
+                labels)
+            out = {k: float(v) for k, v in metrics.items()}
         self.session.params = params
-        return {k: float(v) for k, v in metrics.items()}
+        return out
 
     @property
     def compile_count(self) -> int:
