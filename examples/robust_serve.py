@@ -71,11 +71,12 @@ traffic = [(c, f.copy()) for c, f in clouds]
 traffic[1] = (poison_coords(traffic[1][0], layout), traffic[1][1])  # ingest
 traffic[3] = (traffic[3][0], poison_features(traffic[3][1]))        # session
 reqs = [PointCloudRequest(c, f) for c, f in traffic]
-reqs[4].deadline = 0.0          # already in the past: expires at drain
+reqs[4].deadline = 0.0          # already in the past: expires at submit,
+                                # never occupying a queue slot
 
 eng = PointCloudServeEngine(
     FaultySession(session, poison=feature_poison()),
-    max_queue=len(reqs) - 1)    # bounded queue: the last submit sheds
+    max_queue=len(reqs) - 2)    # bounded queue: the last submit sheds
 eng.run(reqs)                   # never raises
 
 for i, r in enumerate(reqs):

@@ -98,6 +98,26 @@ python -m pytest -x -q tests/test_obs.py
 python examples/robust_serve.py --smoke >/dev/null
 python examples/robust_train.py --smoke >/dev/null
 
+# overload: the serving stack under sustained heavy traffic. Deadlines
+# expire at submit/pack (not just drain), the bucket scheduler batches
+# homogeneously and stays bitwise on both indexing engines, the breaker
+# trips on a fault burst and recovers via a half-open probe, the ladder
+# walks up and back down, and a deterministic 2x-overload run keeps queue
+# delay bounded with nonzero goodput and every request terminal — plus the
+# scripted-scenario example (exact outcome-mix asserts) and the offered-
+# load sweep bench (writes BENCH_serve.json).
+python -m pytest -x -q \
+  tests/test_overload.py::test_dead_on_arrival_expires_at_submit \
+  tests/test_overload.py::test_dead_head_does_not_hold_max_wait_timer \
+  tests/test_overload.py::test_bucket_scheduler_edf_and_excision \
+  tests/test_overload.py::test_admission_controller_law \
+  tests/test_overload.py::test_breaker_trips_fails_fast_and_recovers \
+  tests/test_overload.py::test_ladder_walks_up_and_down_with_hysteresis \
+  tests/test_overload.py::test_terminal_outcome_invariant_mixed_faults \
+  "tests/test_overload.py::test_two_x_overload_bounded_and_bitwise[zdelta]"
+python examples/overload_serve.py --smoke >/dev/null
+python -m benchmarks.bench_serve --smoke >/dev/null
+
 # train bench must stay runnable (writes BENCH_train.json: fwd vs fwd+bwd
 # step latency + the plan's share of a step)
 python -m benchmarks.bench_train --smoke >/dev/null

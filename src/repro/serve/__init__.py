@@ -4,3 +4,7 @@ from .bucketing import BucketedPlanner, bucket_capacity, bucket_packed
 from .session import HealthReport, SpiraSession, compile_network
 from .faults import (FakeClock, FaultySession, PoisonError, TransientError,
                      feature_poison, poison_coords, poison_features)
+from .scheduler import (AdmissionConfig, AdmissionController, BreakerConfig,
+                        BucketScheduler, CircuitBreaker, DegradationLadder,
+                        DispatchTimeoutError, FifoScheduler, LadderConfig)
+from .loadgen import LoadReport, arrival_times, make_traffic, run_open_loop

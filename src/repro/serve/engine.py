@@ -18,15 +18,18 @@ indexing/caches, zero per-request compilation):
 
 Degraded-mode contract (PointCloudServeEngine)
 ----------------------------------------------
-A request admitted to the engine always reaches a terminal ``outcome``; no
-exception from one request's data or one batch's execution ever propagates
-through :meth:`~PointCloudServeEngine.step` / :meth:`~PointCloudServeEngine.run`
+A request admitted to the engine always reaches exactly ONE terminal
+``outcome``; no exception from one request's data, one batch's execution,
+or the traffic level ever propagates through
+:meth:`~PointCloudServeEngine.step` / :meth:`~PointCloudServeEngine.run`
 or takes a co-batched request down with it:
 
 * ``"ok"`` — served; ``logits`` / ``voxels`` hold the answer and (because a
   batch-of-B session call is bitwise identical to B single-scene calls) the
   answer never depends on which requests it was batched with — even when a
-  co-batched request was faulty and the batch was bisected.
+  co-batched request was faulty and the batch was bisected, and even when
+  the engine was running degraded (rungs below): a healthy-scene request is
+  bitwise identical to the same request in an unloaded run.
 * ``"invalid"`` — the scene failed ingest validation
   (``core.validate``; the engine packs with its ``validate=`` policy and
   uses ``ValidationError.scene_index`` to exclude exactly the offending
@@ -36,11 +39,43 @@ or takes a co-batched request down with it:
   the failing batch is split in halves and retried until the poisoned
   request stands alone, so B−1 innocent requests still get their exact
   answers.
-* ``"shed"`` — admission control: the bounded queue (``max_queue``) was
-  full at submit time. Never enters the queue.
+* ``"shed"`` — admission control refused the request at submit time:
+  either the bounded queue (``max_queue``, the hard backstop) was full, or
+  the adaptive controller (``admission=``,
+  :class:`~repro.serve.scheduler.AdmissionController` — CoDel on observed
+  queue delay) was shedding. Never enters the queue;
+  ``counters["admission_shed"]`` separates the adaptive sheds from the
+  backstop's.
 * ``"deadline_expired"`` — the request's ``deadline`` (engine-clock units)
-  passed while it queued; finalized at drain time, before any device work
-  is spent on it.
+  passed before dispatch. Checked at submit time (a dead-on-arrival
+  request never occupies the queue), at every queue expiry sweep
+  (:meth:`step` excises doomed requests from the whole queue before any
+  device work — a dead request can no longer hold the ``max_wait``
+  partial-batch timer hostage), and at drain time.
+* ``"rejected_open"`` — the circuit breaker (``breaker=``,
+  :class:`~repro.serve.scheduler.CircuitBreaker`) was open: a recent run
+  of consecutive non-transient dispatch failures means the session is
+  presumed wedged, so the batch is failed fast — no pack, no device work,
+  no retry burn. After ``cooldown`` one half-open probe batch tests the
+  session; success re-closes the breaker.
+* ``"dispatch_timeout"`` — the dispatch watchdog (``dispatch_timeout=``
+  seconds, REAL time — a hung call cannot be observed on an injectable
+  clock) gave up waiting on a session call. Non-transient by construction
+  (no retry, no bisection — the hang says nothing about which request is
+  at fault); counts as a breaker failure.
+
+Degradation ladder (``ladder=``,
+:class:`~repro.serve.scheduler.DegradationLadder`): under sustained queue
+delay above target the engine trades quality/latency headroom for
+survival, one rung at a time — rung 1 tightens the caller's ``max_wait``
+by ``max_wait_factor``; rung 2 disables WS-overflow replan escalation
+(serves with ``HealthReport`` drops flagged instead of burning replans);
+rung 3 decimates scenes over ``voxel_budget`` input points at pack time
+(deterministic even-stride subsample; ``req.downsampled`` marks the
+answer as approximate). Rungs step back down after the delay has stayed
+under target for ``deescalate_after``. Every served request records the
+rung it was packed under (``req.degradation``); the current rung is the
+``serve_degradation_rung`` gauge.
 
 Transient session failures (classified by the injectable ``transient``
 predicate; by default :class:`repro.serve.faults.TransientError` and
@@ -49,10 +84,19 @@ up to ``max_retries`` times with exponential backoff capped at
 ``backoff_cap`` (injectable ``sleep``) before bisection treats them as
 deterministic. Every decision increments a counter exported by
 :attr:`~PointCloudServeEngine.counters` — the observability surface the
-fault-injection suite (``tests/test_faults.py``) and the CI robustness
-stage assert against. Session degradation (WS pair drops, escalation
-replans — ``serve.session.HealthReport``) rides on each request's
-``health`` and aggregates into ``counters["overflow_replans"]``.
+fault-injection suite (``tests/test_faults.py``), the overload suite
+(``tests/test_overload.py``) and the CI robustness/overload stages assert
+against. Session degradation (WS pair drops, escalation replans —
+``serve.session.HealthReport``) rides on each request's ``health`` and
+aggregates into ``counters["overflow_replans"]``.
+
+Queue discipline (``scheduler=``): ``"fifo"`` (default — the legacy
+single arrival-ordered queue) or ``"bucket"``
+(:class:`~repro.serve.scheduler.BucketScheduler` — one queue per pow2
+capacity bucket, batches are bucket-homogeneous and dispatched
+independently per bucket, earliest-deadline-first within a bucket). See
+``serve.scheduler``'s module doc; ``serve.loadgen`` replays whole
+overload scenarios deterministically on a FakeClock.
 
 Metrics (the contract's observability surface, ``repro.obs``)
 -------------------------------------------------------------
@@ -71,7 +115,12 @@ counters the engine records, per the ROADMAP's serving-hardening item:
 * ``serve_latency_<outcome>`` histograms — submit→terminal-outcome
   latency, one histogram per outcome so SLO percentiles aren't polluted
   by shed/expired requests;
-* ``serve_qps`` rolling rate — scenes served over the trailing 60 s.
+* ``serve_qps`` rolling rate — scenes served over the trailing 60 s;
+* ``serve_queue_depth`` gauge — queue length after each admit/drain;
+* ``serve_breaker_state`` gauge — 0 closed / 1 half-open / 2 open
+  (only when a breaker is configured);
+* ``serve_degradation_rung`` gauge — current ladder rung (only when a
+  ladder is configured).
 
 Instrumentation is observational only: engine answers stay bitwise
 identical to an uninstrumented run, and session compile/search counts are
@@ -81,7 +130,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -94,6 +142,9 @@ from repro.models import transformer as tf
 from repro.models.common import ModelConfig
 from repro.obs import CounterView, MetricsRegistry, span
 from .faults import TransientError
+from .scheduler import (AdmissionConfig, AdmissionController, BreakerConfig,
+                        BucketScheduler, CircuitBreaker, DegradationLadder,
+                        DispatchTimeoutError, FifoScheduler, LadderConfig)
 
 
 # ---------------------------------------------------------------------------
@@ -125,13 +176,18 @@ class PointCloudRequest:
     deadline: Optional[float] = None   # engine-clock time after which the
                                        # request is dropped unserved
     outcome: str = "pending"           # "ok" | "invalid" | "quarantined" |
-                                       # "shed" | "deadline_expired"
+                                       # "shed" | "deadline_expired" |
+                                       # "rejected_open" | "dispatch_timeout"
     error: Optional[str] = None        # structured message for non-ok ends
     health: Optional[object] = None    # serve.session.HealthReport when the
                                        # session exports one
     submitted_at: Optional[float] = None   # engine clock at submit; feeds
                                            # the per-outcome latency
                                            # histograms (module doc)
+    degradation: int = 0               # ladder rung this request was packed
+                                       # under (0 = healthy engine)
+    downsampled: bool = False          # rung 3 decimated this scene to the
+                                       # voxel budget: answer is approximate
 
     @property
     def finished(self) -> bool:
@@ -197,6 +253,13 @@ class PointCloudServeEngine:
     deadline_expired = CounterView("serve_deadline_expired")
     retries = CounterView("serve_retries")
     overflow_replans = CounterView("serve_overflow_replans")
+    # overload-control counters (module doc, "Degraded-mode contract")
+    rejected_open = CounterView("serve_rejected_open")
+    dispatch_timeouts = CounterView("serve_dispatch_timeouts")
+    admission_shed = CounterView("serve_admission_shed")
+    breaker_trips = CounterView("serve_breaker_trips")
+    downsampled = CounterView("serve_downsampled")
+    degradations = CounterView("serve_degradations")
 
     def __init__(self, session, max_batch: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
@@ -208,7 +271,12 @@ class PointCloudServeEngine:
                  backoff_cap: float = 0.5,
                  sleep: Callable[[float], None] = time.sleep,
                  transient: Optional[Callable[[BaseException], bool]] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 scheduler="fifo",
+                 admission=None,
+                 breaker=None,
+                 ladder=None,
+                 dispatch_timeout: Optional[float] = None):
         # Duck-typed: a compiled SpiraSession or anything shaped like one
         # (callable, with layout/num_scenes) — the fault-injection wrapper
         # serve.faults.FaultySession drops in here.
@@ -228,12 +296,28 @@ class PointCloudServeEngine:
                         or MetricsRegistry(clock=clock))
         self.max_batch = min(max_batch or session.num_scenes,
                              session.num_scenes)
-        self.pending: deque[PointCloudRequest] = deque()
-        self._arrivals: deque[float] = deque()   # clock() at submit, aligned
+        # queue discipline (module doc): "fifo" | "bucket" | instance
+        if scheduler == "fifo":
+            self._sched = FifoScheduler()
+        elif scheduler == "bucket":
+            self._sched = BucketScheduler(
+                min_bucket=getattr(session, "min_bucket", 1024),
+                max_bucket=getattr(session, "max_bucket", None))
+        else:
+            self._sched = scheduler
+        # overload policies: config-or-instance, None = off (legacy behavior)
+        self._admission = (AdmissionController(admission)
+                           if isinstance(admission, AdmissionConfig)
+                           else admission)
+        self._breaker = (CircuitBreaker(breaker)
+                         if isinstance(breaker, BreakerConfig) else breaker)
+        self._ladder = (DegradationLadder(ladder)
+                        if isinstance(ladder, LadderConfig) else ladder)
+        self.dispatch_timeout = dispatch_timeout   # REAL seconds (watchdog)
         self._clock = clock                      # injectable for tests
         self._sleep = sleep                      # injectable for tests
         self.pack_ahead = pack_ahead
-        self.max_queue = max_queue               # None = unbounded
+        self.max_queue = max_queue               # None = unbounded backstop
         self.validate = validate                 # ingest policy (core.validate)
         self.max_retries = max_retries
         self.backoff = backoff
@@ -250,6 +334,26 @@ class PointCloudServeEngine:
         self.deadline_expired = 0
         self.retries = 0
         self.overflow_replans = 0
+        self.rejected_open = 0
+        self.dispatch_timeouts = 0
+        self.admission_shed = 0
+        self.breaker_trips = 0
+        self.downsampled = 0
+        self.degradations = 0
+        if self._breaker is not None:
+            self._sync_breaker()
+        if self._ladder is not None:
+            self.metrics.gauge("serve_degradation_rung").set(self._ladder.rung)
+
+    @property
+    def pending(self):
+        """The queue discipline (``len()`` / truthiness = queued requests)."""
+        return self._sched
+
+    @property
+    def degradation_rung(self) -> int:
+        """Current ladder rung (0 when no ladder is configured)."""
+        return self._ladder.rung if self._ladder is not None else 0
 
     @property
     def counters(self) -> Dict[str, int]:
@@ -257,20 +361,39 @@ class PointCloudServeEngine:
         return {k: getattr(self, k) for k in (
             "admitted", "shed", "invalid", "quarantined", "deadline_expired",
             "retries", "overflow_replans", "batches_run", "scenes_served",
-            "packs_overlapped")}
+            "packs_overlapped", "rejected_open", "dispatch_timeouts",
+            "admission_shed", "breaker_trips", "downsampled", "degradations")}
 
     def submit(self, req: PointCloudRequest) -> bool:
-        """Admit a request, or shed it (``outcome="shed"``) when the bounded
-        queue is full. Returns whether the request was admitted."""
-        req.submitted_at = self._clock()
-        if self.max_queue is not None and len(self.pending) >= self.max_queue:
+        """Admit a request, or finalize it unadmitted: ``deadline_expired``
+        when it is dead on arrival, ``shed`` when the adaptive admission
+        controller is shedding or the bounded queue (the hard backstop) is
+        full. Returns whether the request was admitted."""
+        now = self._clock()
+        req.submitted_at = now
+        if req.deadline is not None and now > req.deadline:
+            # submit-time expiry: dead on arrival — never occupies the queue
+            self._finish(req, "deadline_expired",
+                         f"deadline {req.deadline:.3f} already passed at "
+                         f"submit time {now:.3f}")
+            self.deadline_expired += 1
+            return False
+        if (self._admission is not None
+                and not self._admission.offer(now, len(self._sched))):
+            self._finish(req, "shed",
+                         "admission control: standing queue delay above "
+                         "target; retry later")
+            self.admission_shed += 1
+            self.shed += 1
+            return False
+        if self.max_queue is not None and len(self._sched) >= self.max_queue:
             self._finish(req, "shed",
                          f"queue full ({self.max_queue} pending); retry later")
             self.shed += 1
             return False
-        self.pending.append(req)
-        self._arrivals.append(self._clock())
+        self._sched.push(req, now)
         self.admitted += 1
+        self.metrics.gauge("serve_queue_depth").set(len(self._sched))
         return True
 
     # -- batch plumbing (shared by the serial step and the pipelined run) --
@@ -287,30 +410,70 @@ class PointCloudServeEngine:
             self.metrics.histogram(f"serve_latency_{req.outcome}").record(
                 self._clock() - req.submitted_at)
 
+    def _expire_queue(self, now: float) -> List[PointCloudRequest]:
+        """Excise every queued request whose deadline has passed — from the
+        WHOLE queue, not just the drain prefix — and finalize them. Runs
+        before any device work is spent and before the ``max_wait`` hold
+        check, so a dead request can neither ride into a pack nor keep the
+        partial-batch timer alive."""
+        expired = []
+        for req, at in self._sched.expire(now):
+            self._finish(req, "deadline_expired",
+                         f"deadline {req.deadline:.3f} passed at "
+                         f"{now:.3f} (queued at {at:.3f})")
+            self.deadline_expired += 1
+            expired.append(req)
+        if expired:
+            self.metrics.gauge("serve_queue_depth").set(len(self._sched))
+        return expired
+
+    def _observe_wait(self, wait: float, now: float) -> None:
+        """Feed one queue-wait sample to the overload controllers."""
+        self.metrics.histogram("serve_queue_wait").record(wait)
+        if self._admission is not None:
+            self._admission.observe(wait, now)
+        if self._ladder is not None:
+            prev = self._ladder.rung
+            rung = self._ladder.observe(wait, now)
+            if rung != prev:
+                if rung > prev:
+                    self.degradations += 1
+                self.metrics.gauge("serve_degradation_rung").set(rung)
+
     def _drain_batch(self) -> Tuple[List[PointCloudRequest], List[float],
                                     List[PointCloudRequest]]:
-        """Pop up to max_batch live requests with their submit timestamps.
-        Requests whose ``deadline`` has passed are finalized
-        (``deadline_expired``) here — at drain time, before any device work
-        is spent on them — and returned separately (third element)."""
-        batch, arrivals, expired = [], [], []
+        """Expire doomed requests queue-wide, then pop the next batch per
+        the queue discipline (FIFO, or one bucket in EDF order). Returns
+        ``(batch, arrivals, expired)``; each drained request is stamped
+        with the active degradation rung."""
         now = self._clock()
-        while self.pending and len(batch) < self.max_batch:
-            req = self.pending.popleft()
-            at = self._arrivals.popleft()
-            if req.deadline is not None and now > req.deadline:
-                self._finish(req, "deadline_expired",
-                             f"deadline {req.deadline:.3f} passed at "
-                             f"drain time {now:.3f} (queued at {at:.3f})")
-                self.deadline_expired += 1
-                expired.append(req)
-                continue
-            batch.append(req)
-            arrivals.append(at)
-            self.metrics.histogram("serve_queue_wait").record(now - at)
+        expired = self._expire_queue(now)
+        batch, arrivals = self._sched.drain(now, self.max_batch)
+        for req, at in zip(batch, arrivals):
+            self._observe_wait(now - at, now)
+            req.degradation = self.degradation_rung
+        if batch:
+            self.metrics.gauge("serve_queue_depth").set(len(self._sched))
         return batch, arrivals, expired
 
+    def _downsample(self, batch: List[PointCloudRequest]) -> None:
+        """Rung 3: decimate scenes over the voxel budget to exactly the
+        budget with a deterministic even-stride subsample (strictly
+        increasing indices — budget < N means the stride exceeds 1, so no
+        row repeats). The request keeps its answer shape contract (logits
+        on ITS packed rows), just on fewer input points."""
+        budget = self._ladder.config.voxel_budget
+        for r in batch:
+            if len(r.coords) > budget and not r.downsampled:
+                idx = np.linspace(0, len(r.coords) - 1, budget).astype(int)
+                r.coords = r.coords[idx]
+                r.features = r.features[idx]
+                r.downsampled = True
+                self.downsampled += 1
+
     def _pack(self, batch: List[PointCloudRequest]) -> SparseTensor:
+        if self._ladder is not None and self._ladder.rung >= 3:
+            self._downsample(batch)
         with span("serve/pack", self.metrics):
             return SparseTensor.from_point_clouds(
                 [(r.coords, r.features) for r in batch], self.session.layout,
@@ -335,19 +498,61 @@ class PointCloudServeEngine:
 
     # -- fault isolation (module doc, "Degraded-mode contract") ----------
 
+    def _invoke_session(self, st: SparseTensor):
+        """The raw session call, with the rung-2 degradation applied:
+        under ``no_escalation`` the session serves at its base plan with
+        ``max_replans=0`` — WS drops are flagged on the HealthReport
+        instead of cured by replans (latency headroom over exactness)."""
+        if hasattr(self.session, "run_with_health"):
+            if self._ladder is not None and self._ladder.rung >= 2:
+                return self.session.run_with_health(st, max_replans=0)
+            return self.session.run_with_health(st)
+        return self.session(st), None
+
+    def _watched(self, st: SparseTensor):
+        """Dispatch under the watchdog: the session call runs on a daemon
+        thread and we wait at most ``dispatch_timeout`` REAL seconds for
+        it (an injectable clock cannot observe a hang — nothing would
+        advance it). On timeout the call is abandoned (daemon thread: it
+        cannot block interpreter exit) and DispatchTimeoutError raised."""
+        if self.dispatch_timeout is None:
+            return self._invoke_session(st)
+        import threading
+        box: dict = {}
+        done = threading.Event()
+
+        def work():
+            try:
+                box["out"] = self._invoke_session(st)
+            except BaseException as e:
+                box["exc"] = e
+            finally:
+                done.set()
+
+        threading.Thread(target=work, daemon=True).start()
+        if not done.wait(self.dispatch_timeout):
+            raise DispatchTimeoutError(
+                f"session dispatch exceeded the {self.dispatch_timeout}s "
+                f"watchdog (batch of {int(st.num_scenes)} scene slots)")
+        if "exc" in box:
+            raise box["exc"]
+        return box["out"]
+
     def _call_session(self, st: SparseTensor):
         """One session call with capped-backoff retry of transient faults.
         Raises only after ``max_retries`` transient failures (or on the
-        first non-transient one) — bisection takes over from there."""
+        first non-transient one) — bisection takes over from there. A
+        watchdog timeout is never retried: a hung call burns another full
+        timeout and says nothing bisection could use."""
         attempt = 0
         while True:
             try:
                 with span("serve/dispatch", self.metrics):
-                    if hasattr(self.session, "run_with_health"):
-                        return self.session.run_with_health(st)
-                    return self.session(st), None
+                    return self._watched(st)
             except Exception as e:
-                if not self._transient(e) or attempt >= self.max_retries:
+                if (isinstance(e, DispatchTimeoutError)
+                        or not self._transient(e)
+                        or attempt >= self.max_retries):
                     raise
                 self.retries += 1
                 self._sleep(min(self.backoff * (2 ** attempt),
@@ -377,15 +582,52 @@ class PointCloudServeEngine:
             return
         self._dispatch(batch, st)
 
+    def _sync_breaker(self) -> None:
+        self.metrics.gauge("serve_breaker_state").set(
+            {"closed": 0, "half_open": 1, "open": 2}[self._breaker.state])
+
+    def _breaker_failure(self) -> None:
+        if self._breaker is None:
+            return
+        if self._breaker.record_failure(self._clock()):
+            self.breaker_trips += 1
+        self._sync_breaker()
+
     def _dispatch(self, batch: List[PointCloudRequest],
                   st: SparseTensor) -> None:
         """Run one packed batch; on persistent failure bisect down to the
-        poisoned request. Never raises."""
+        poisoned request. Never raises. Gated by the circuit breaker
+        (batches fail fast as ``rejected_open`` while it is open); a
+        watchdog timeout fails the whole batch as ``dispatch_timeout``
+        (no bisection — the hang attributes to no request) and feeds the
+        breaker."""
+        if self._breaker is not None:
+            allowed = self._breaker.allow(self._clock())
+            self._sync_breaker()
+            if not allowed:
+                for req in batch:
+                    self._finish(req, "rejected_open",
+                                 f"circuit breaker open after "
+                                 f"{self._breaker.config.threshold} "
+                                 f"consecutive dispatch failures; "
+                                 f"retry after cooldown")
+                    self.rejected_open += 1
+                return
         try:
             out, health = self._call_session(st)
+        except DispatchTimeoutError as e:
+            for req in batch:
+                self._finish(req, "dispatch_timeout", str(e))
+                self.dispatch_timeouts += 1
+            self._breaker_failure()
+            return
         except Exception as e:
+            self._breaker_failure()
             self._isolate(batch, e, "quarantined")
             return
+        if self._breaker is not None:
+            self._breaker.record_success()
+            self._sync_breaker()
         self._answer(batch, out, health)
 
     def _isolate(self, batch: List[PointCloudRequest], exc: BaseException,
@@ -414,18 +656,29 @@ class PointCloudServeEngine:
         """Serve one batch (up to ``max_batch`` queued requests). Returns
         every request finalized this step (served, failed, or expired).
 
-        ``max_wait``: hold a partial batch (return ``[]``, serve nothing)
-        until the oldest queued request has waited this many seconds, then
-        dispatch whatever is queued (class doc). ``None`` dispatches
-        immediately."""
-        if not self.pending:
+        ``max_wait``: hold a partial batch (serve nothing) until the oldest
+        queued LIVE request has waited this many seconds, then dispatch
+        whatever is queued (class doc). ``None`` dispatches immediately.
+        Already-expired requests are excised and finalized BEFORE the hold
+        check, so a dead request neither keeps the timer alive nor counts
+        toward the batch; expiring the whole queue just returns the expired
+        requests. Under ladder rung ≥ 1 the hold is tightened to
+        ``max_wait * max_wait_factor``."""
+        if not self._sched:
             return []
-        if (max_wait is not None and len(self.pending) < self.max_batch
-                and self._clock() - self._arrivals[0] < max_wait):
-            return []
-        batch, _, expired = self._drain_batch()
+        now = self._clock()
+        expired = self._expire_queue(now)
+        if not self._sched:          # everything queued had expired
+            return expired
+        if max_wait is not None and self.degradation_rung >= 1:
+            max_wait *= self._ladder.config.max_wait_factor
+        if (max_wait is not None
+                and not self._sched.has_full(self.max_batch)
+                and now - self._sched.oldest_arrival() < max_wait):
+            return expired
+        batch, _, more = self._drain_batch()
         self._serve_batch(batch)
-        return batch + expired
+        return batch + expired + more
 
     def run(self, requests: Sequence[PointCloudRequest]
             ) -> List[PointCloudRequest]:
@@ -438,7 +691,7 @@ class PointCloudServeEngine:
         for r in requests:
             self.submit(r)
         if not self.pack_ahead:
-            while self.pending:
+            while self._sched:
                 self.step()
             return list(requests)
         from concurrent.futures import ThreadPoolExecutor

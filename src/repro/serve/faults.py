@@ -29,6 +29,7 @@ exception types (to classify transient errors by default).
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Callable, Iterable, Optional, Sequence
 
@@ -108,14 +109,21 @@ class FaultySession:
       trips, the call raises :class:`PoisonError` every time (deterministic
       request-borne fault — see :func:`feature_poison`).
     * ``delay`` — seconds of ``sleep`` before each call (slow device /
-      slow model, for overlap and deadline tests).
+      slow model, for overlap and deadline tests; with a FakeClock's
+      ``sleep``, this is the injectable *service time* the load generator
+      builds overload arithmetic on).
+    * ``hang_calls`` — call indices that block on ``hang_release``
+      (a ``threading.Event``) instead of running: a truly wedged dispatch,
+      for the engine's watchdog. Tests MUST ``hang_release.set()`` in
+      teardown so the abandoned daemon thread finishes.
     """
 
     def __init__(self, session, *, fail_calls: Iterable[int] = (),
                  exc: type = TransientError,
                  poison: Optional[Callable[[object], bool]] = None,
                  delay: float = 0.0,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 hang_calls: Iterable[int] = ()):
         self.session = session
         # keep lazy containers (range) as-is: `i in range(...)` is O(1)
         self.fail_calls = (fail_calls if hasattr(fail_calls, "__contains__")
@@ -124,8 +132,13 @@ class FaultySession:
         self.poison = poison
         self.delay = delay
         self._sleep = sleep
+        self.hang_calls = (hang_calls if hasattr(hang_calls, "__contains__")
+                           else frozenset(hang_calls))
+        self.hang_release = threading.Event()
         self.calls = 0            # total calls seen (including failed ones)
         self.faults_raised = 0
+        self.last_call_kwargs: Optional[dict] = None   # run_with_health kw
+                                                       # seen on the last call
 
     # engine duck-type surface ------------------------------------------------
 
@@ -147,11 +160,23 @@ class FaultySession:
         # registry, same as over a bare session
         return getattr(self.session, "metrics", None)
 
+    @property
+    def min_bucket(self):
+        # the engine's BucketScheduler keys queues off the session's
+        # bucketing policy; proxy it like layout/num_scenes
+        return getattr(self.session, "min_bucket", 1024)
+
+    @property
+    def max_bucket(self):
+        return getattr(self.session, "max_bucket", None)
+
     def _gate(self, st) -> None:
         i = self.calls
         self.calls += 1
         if self.delay:
             self._sleep(self.delay)
+        if i in self.hang_calls:
+            self.hang_release.wait()   # wedged until the test releases it
         if self.poison is not None and self.poison(st):
             self.faults_raised += 1
             raise PoisonError(
@@ -161,10 +186,11 @@ class FaultySession:
             self.faults_raised += 1
             raise self.exc(f"injected transient fault at call {i}")
 
-    def run_with_health(self, st):
+    def run_with_health(self, st, **kw):
+        self.last_call_kwargs = dict(kw)
         self._gate(st)
         if hasattr(self.session, "run_with_health"):
-            return self.session.run_with_health(st)
+            return self.session.run_with_health(st, **kw)
         return self.session(st), None
 
     def __call__(self, st):

@@ -248,11 +248,18 @@ class SpiraSession:
     def __call__(self, st: SparseTensor) -> SparseTensor:
         return self.run_with_health(st)[0]
 
-    def run_with_health(self, st: SparseTensor
+    def run_with_health(self, st: SparseTensor, *,
+                        max_replans: Optional[int] = None
                         ) -> Tuple[SparseTensor, HealthReport]:
         """Run with the escalation loop (class doc) and return
         ``(logits, health)``. ``session(st)`` is sugar for the first
-        element; the last report also lands on ``session.last_health``."""
+        element; the last report also lands on ``session.last_health``.
+
+        ``max_replans`` caps this CALL's escalation budget below the
+        session's ``max_overflow_replans`` (it can only tighten, never
+        raise it) — the serving engine's degradation ladder passes 0 under
+        sustained overload, serving at the base plan with any WS drops
+        flagged on the HealthReport instead of cured by replans."""
         ensure_sparse_tensor(st, where="SpiraSession")
         if st.layout != self.layout:
             raise ValueError(
@@ -266,6 +273,8 @@ class SpiraSession:
                 f"SparseTensor has {st.channels} feature channels; "
                 f"{self.net.name} expects {self.net.in_channels}.")
         base = self._bucket(st.capacity)
+        budget = (self.max_overflow_replans if max_replans is None
+                  else min(max_replans, self.max_overflow_replans))
         esc = replans = 0
         while True:
             bucket = self._esc_bucket(base, esc)
@@ -280,8 +289,7 @@ class SpiraSession:
                 logits, out_packed, out_count, drops, ovf = fn(
                     self.params, stp.packed, stp.features)
                 dropped = {k: int(v) for k, v in drops.items()}
-            if (sum(dropped.values()) == 0
-                    or esc >= self.max_overflow_replans):
+            if sum(dropped.values()) == 0 or esc >= budget:
                 break
             esc += 1
             replans += 1

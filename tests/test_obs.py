@@ -344,10 +344,54 @@ def test_engine_counters_dict_api_compatible(world):
     assert eng.counters == {
         "admitted": 4, "shed": 0, "invalid": 0, "quarantined": 0,
         "deadline_expired": 0, "retries": 0, "overflow_replans": 0,
-        "batches_run": 1, "scenes_served": 4, "packs_overlapped": 0}
+        "batches_run": 1, "scenes_served": 4, "packs_overlapped": 0,
+        "rejected_open": 0, "dispatch_timeouts": 0, "admission_shed": 0,
+        "breaker_trips": 0, "downsampled": 0, "degradations": 0}
     snap = session.metrics.snapshot()
     assert all(snap["counters"][f"serve_{k}"] == v
                for k, v in eng.counters.items())
+
+
+def test_breaker_gauge_and_outcome_counters_exported(world):
+    """The overload-control surface reaches the Prometheus export: the
+    breaker-state gauge walks closed(0) -> open(2) -> half_open(1) ->
+    closed(0), and the new outcome counters (rejected_open /
+    dispatch_timeouts / breaker_trips) appear as spira_serve_* series."""
+    from repro.obs import parse_prometheus_text
+    from repro.serve import BreakerConfig, FakeClock, FaultySession
+
+    layout, clouds = world
+    ck = FakeClock()
+    reg = MetricsRegistry(clock=ck)
+    session = compile_network(_tiny_net(), layout, batch=4, min_bucket=128,
+                              metrics=reg)
+    fs = FaultySession(session, fail_calls=range(0, 2), exc=RuntimeError)
+    eng = PointCloudServeEngine(fs, max_batch=1, clock=ck,
+                                breaker=BreakerConfig(threshold=2,
+                                                      cooldown=1.0))
+    gauge = reg.gauge("serve_breaker_state")
+    assert gauge.value == 0                       # closed at construction
+    reqs = [PointCloudRequest(c, f) for c, f in clouds]
+    for r in reqs[:2]:                            # two failures: trip
+        eng.submit(r)
+        eng.step()
+    assert gauge.value == 2 and eng.breaker_trips == 1
+    eng.submit(reqs[2])                           # open: rejected fast
+    eng.step()
+    assert reqs[2].outcome == "rejected_open" and eng.rejected_open == 1
+    ck.advance(1.5)                               # cooldown -> half-open
+    eng.submit(reqs[3])                           # probe succeeds -> closed
+    eng.step()
+    assert reqs[3].outcome == "ok" and gauge.value == 0
+
+    samples = parse_prometheus_text(reg.to_prometheus_text())
+    assert samples["spira_serve_breaker_state"] == [("", 0.0)]
+    assert samples["spira_serve_rejected_open"] == [("", 1.0)]
+    assert samples["spira_serve_breaker_trips"] == [("", 1.0)]
+    assert samples["spira_serve_dispatch_timeouts"] == [("", 0.0)]
+    assert "spira_serve_latency_rejected_open_bucket" in samples
+    snap = reg.snapshot()
+    assert snap["counters"]["serve_quarantined"] == 2  # the trip's failures
 
 
 def test_trainer_metrics_and_ckpt_metrics(world, tmp_path):

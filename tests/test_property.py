@@ -266,3 +266,111 @@ def test_guarded_update_never_writes_nonfinite(data):
         assert int(new_o.step) == 1
     assert all(np.isfinite(np.asarray(x)).all()
                for x in jax.tree.leaves(new_p))
+
+
+# ---------------------------------------------------------------------------
+# serving overload: the terminal-outcome invariant (ISSUE 10)
+# Deterministic mirror: tests/test_overload.py
+# test_terminal_outcome_invariant_mixed_faults (same harness, fixed mix).
+# ---------------------------------------------------------------------------
+
+_SERVE_TERMINAL = ("ok", "invalid", "quarantined", "shed", "deadline_expired",
+                   "rejected_open", "dispatch_timeout")
+
+
+class _IdentitySession:
+    """Duck-typed stub session (callable + layout/num_scenes/min_bucket):
+    exercises the whole engine control plane — scheduling, admission,
+    breaker, ladder, bisection — without a compiled network."""
+
+    def __init__(self, layout, num_scenes=4, min_bucket=128):
+        self.layout = layout
+        self.num_scenes = num_scenes
+        self.min_bucket = min_bucket
+
+    def run_with_health(self, st_, **kw):
+        return st_, None
+
+    def __call__(self, st_):
+        return st_
+
+
+_serve_req_strategy = st.lists(
+    st.tuples(
+        st.integers(2, 180),                  # scene size (rows drawn below)
+        st.floats(0.0, 0.2),                  # inter-arrival gap (s)
+        st.one_of(st.none(), st.floats(-0.5, 2.0)),   # absolute deadline
+        st.booleans(),                        # poisoned?
+    ),
+    min_size=1, max_size=14)
+
+
+@SET
+@given(_serve_req_strategy,
+       st.sets(st.integers(0, 20), max_size=4),       # failing call indices
+       st.integers(0, 2 ** 31 - 1))
+def test_serve_overload_every_request_terminal(spec, fail_calls, seed):
+    """Under arbitrary arrival schedules, deadlines, scene sizes (mixed
+    pow2 buckets) and injected fault mixes, every submitted request reaches
+    exactly ONE terminal outcome — none lost, none double-finalized (each
+    finalization records exactly one per-outcome latency sample, so the
+    histogram counts must sum to submissions) — and the engine's counters
+    sum back to the submissions."""
+    from repro.obs import MetricsRegistry
+    from repro.serve import (AdmissionConfig, BreakerConfig, FakeClock,
+                             FaultySession, LadderConfig,
+                             PointCloudServeEngine, feature_poison,
+                             make_traffic, run_open_loop)
+
+    layout = BitLayout.for_extent(220, 170, 100, guard=16)
+    rng = np.random.default_rng(seed)
+    base = np.array(sorted(set(
+        map(tuple, rng.integers((16, 16, 16), (200, 150, 80),
+                                size=(200, 3))))), np.int32)
+    clouds, arrivals, deadlines, poison = [], [], {}, []
+    t = 0.0
+    for i, (size, gap, deadline, poisoned) in enumerate(spec):
+        size = min(size, len(base))
+        clouds.append((base[:size],
+                       np.ones((size, 4), np.float32)))
+        t += gap
+        arrivals.append(t)
+        if deadline is not None:
+            deadlines[i] = deadline
+        if poisoned:
+            poison.append(i)
+
+    ck = FakeClock()
+    reg = MetricsRegistry(clock=ck)
+    fs = FaultySession(_IdentitySession(layout), delay=0.03, sleep=ck.sleep,
+                       poison=feature_poison(), fail_calls=fail_calls,
+                       exc=RuntimeError)
+    eng = PointCloudServeEngine(
+        fs, clock=ck, max_queue=5, metrics=reg, scheduler="bucket",
+        admission=AdmissionConfig(target=0.04, interval=0.15),
+        breaker=BreakerConfig(threshold=2, cooldown=0.3),
+        ladder=LadderConfig(target=0.04, escalate_after=0.2,
+                            deescalate_after=0.4, voxel_budget=128))
+    reqs = make_traffic(clouds, len(clouds), poison=poison,
+                        deadlines=deadlines)
+    run_open_loop(eng, list(zip(arrivals, reqs)), ck)
+
+    n = len(reqs)
+    assert all(r.outcome in _SERVE_TERMINAL for r in reqs)
+    recorded = sum(reg.histogram(f"serve_latency_{o}").count
+                   for o in _SERVE_TERMINAL)
+    assert recorded == n, f"finalizations {recorded} != submissions {n}"
+    c = eng.counters
+    mix = {o: sum(r.outcome == o for r in reqs) for o in _SERVE_TERMINAL}
+    assert c["shed"] == mix["shed"]
+    assert c["invalid"] == mix["invalid"]
+    assert c["quarantined"] == mix["quarantined"]
+    assert c["deadline_expired"] == mix["deadline_expired"]
+    assert c["rejected_open"] == mix["rejected_open"]
+    assert c["dispatch_timeouts"] == mix["dispatch_timeout"]
+    assert c["scenes_served"] == mix["ok"]
+    refused = mix["shed"] + sum(
+        r.outcome == "deadline_expired" and r.deadline is not None
+        and r.submitted_at is not None and r.submitted_at > r.deadline
+        for r in reqs)
+    assert c["admitted"] + refused == n
